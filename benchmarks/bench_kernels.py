@@ -1,0 +1,88 @@
+"""Kernel microbenchmarks: XLA path timings (CPU) + interpret-mode
+correctness + compression ratios. Pallas wall times on CPU interpret mode are
+not meaningful; the dry-run roofline covers the TPU-side story."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, timeit
+from repro.core import pairing
+from repro.kernels import ops
+from repro.kernels.delta import packed_nbytes
+
+
+def run(n: int = 1 << 18):
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.integers(0, 2**32, size=n, dtype=np.uint32))
+    y = jnp.asarray(rng.integers(0, 2**32, size=n, dtype=np.uint32))
+
+    # XLA u64 path (production CPU/GPU fallback)
+    pair64 = jax.jit(lambda a, b: pairing.szudzik_pair(
+        a.astype(jnp.uint64), b.astype(jnp.uint64)))
+    z = pair64(x, y)
+    jax.block_until_ready(z)
+    t = timeit(lambda: jax.block_until_ready(pair64(x, y)))
+    emit("kernel_szudzik/xla_u64_pair", 1e6 * t, f"n={n};ns_per_el={1e9*t/n:.2f}")
+
+    unpair64 = jax.jit(lambda z: pairing.szudzik_unpair(z))
+    jax.block_until_ready(unpair64(z))
+    t = timeit(lambda: jax.block_until_ready(unpair64(z)))
+    emit("kernel_szudzik/xla_u64_unpair", 1e6 * t,
+         f"n={n};ns_per_el={1e9*t/n:.2f}")
+
+    # u32x2 lane-pair math through XLA (the kernel's math, compiled)
+    from repro.kernels.szudzik import szudzik_pair_math, szudzik_unpair_math
+    pair32 = jax.jit(szudzik_pair_math)
+    hi, lo = pair32(x, y)
+    jax.block_until_ready(lo)
+    t = timeit(lambda: jax.block_until_ready(pair32(x, y)))
+    emit("kernel_szudzik/xla_u32x2_pair", 1e6 * t,
+         f"n={n};ns_per_el={1e9*t/n:.2f}")
+    unpair32 = jax.jit(szudzik_unpair_math)
+    jax.block_until_ready(unpair32(hi, lo))
+    t = timeit(lambda: jax.block_until_ready(unpair32(hi, lo)))
+    emit("kernel_szudzik/xla_u32x2_unpair", 1e6 * t,
+         f"n={n};ns_per_el={1e9*t/n:.2f}")
+
+    # pallas interpret-mode correctness flags (small sizes)
+    xs, ys = x[:1024], y[:1024]
+    phi, plo = ops.szudzik_pair(xs, ys, interpret=True)
+    ok = bool((pairing.join_u64(phi, plo) ==
+               pairing.szudzik_pair(xs.astype(jnp.uint64),
+                                    ys.astype(jnp.uint64))).all())
+    emit("kernel_szudzik/pallas_interpret_exact", 0.0, f"exact={ok}")
+
+    # delta codec: compression ratio + XLA encode/decode timing
+    base = rng.integers(0, 2**60, size=(512, 1)).astype(np.uint64)
+    deltas = rng.integers(0, 500, size=(512, 128)).astype(np.uint64)
+    codes = base + np.cumsum(deltas, axis=1)
+    chi, clo = pairing.split_u64(jnp.asarray(codes))
+    packed, widths, ahi, alo = ops.delta_pack(chi, clo)
+    jax.block_until_ready(packed)
+    t = timeit(lambda: jax.block_until_ready(ops.delta_pack(chi, clo)))
+    ratio = codes.nbytes / packed_nbytes(widths)
+    emit("kernel_delta/pack", 1e6 * t, f"compression_ratio={ratio:.2f}")
+    ohi, olo = ops.delta_unpack(packed, widths, ahi, alo, interpret=True)
+    exact = bool((np.asarray(pairing.join_u64(ohi, olo)) == codes).all())
+    emit("kernel_delta/unpack_interpret_exact", 0.0, f"exact={exact}")
+
+    # sgns fused vs unfused XLA
+    from repro.kernels.ref import sgns_ref
+    b, k, d = 4096, 5, 128
+    u = jnp.asarray(rng.normal(size=(b, d)), jnp.float32)
+    vp = jnp.asarray(rng.normal(size=(b, d)), jnp.float32)
+    vn = jnp.asarray(rng.normal(size=(b, k, d)), jnp.float32)
+    ref = jax.jit(sgns_ref)
+    jax.block_until_ready(ref(u, vp, vn)[0])
+    t = timeit(lambda: jax.block_until_ready(ref(u, vp, vn)[0]))
+    emit("kernel_sgns/xla_unfused", 1e6 * t, f"b={b};us_per_row={1e6*t/b:.3f}")
+    loss, *_ = ops.sgns_step(u[:64], vp[:64], vn[:64], interpret=True)
+    rl, *_ = sgns_ref(u[:64], vp[:64], vn[:64])
+    emit("kernel_sgns/pallas_interpret_close", 0.0,
+         f"close={bool(np.isclose(float(loss.sum()), float(rl), rtol=1e-4))}")
+
+
+if __name__ == "__main__":
+    run()

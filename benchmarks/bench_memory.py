@@ -1,0 +1,74 @@
+"""Paper Fig. 8 + §7.5: memory footprint of Wharf (FOR-packed) vs II-based vs
+Tree-based; scaling in l and n_w; the difference-encoding ablation; and the
+vertex-id distribution study."""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import (BenchGraph, build_engines, build_graph, emit,
+                               timeit)
+from repro.core import WalkConfig, generate_corpus, pairing
+from repro.kernels.delta import packed_nbytes
+from repro.kernels import ops
+
+
+def store_bytes(eng):
+    return eng.store.nbytes_packed()
+
+
+def run():
+    bg = BenchGraph(log2_n=12, n_edges=36_000)
+    # -- Fig 8a: footprint across engines
+    _, engines = build_engines(bg, WalkConfig(n_walks_per_vertex=2, length=10))
+    w = engines["wharf"].store
+    emit("fig8a_memory/wharf_packed", 0.0, f"bytes={w.nbytes_packed()}")
+    emit("fig8a_memory/wharf_raw64", 0.0, f"bytes={w.nbytes_uncompressed()}")
+    emit("fig8a_memory/ii", 0.0, f"bytes={engines['ii'].nbytes()}")
+    emit("fig8a_memory/tree", 0.0, f"bytes={engines['tree'].nbytes()}")
+
+    # -- Fig 8b/8c: vary l and n_w (wharf vs ii)
+    for length in (5, 10, 20, 40):
+        _, e = build_engines(bg, WalkConfig(n_walks_per_vertex=2,
+                                            length=length),
+                             which=("wharf", "ii"))
+        emit(f"fig8b_vary_l/l{length}/wharf", 0.0,
+             f"bytes={e['wharf'].store.nbytes_packed()}")
+        emit(f"fig8b_vary_l/l{length}/ii", 0.0, f"bytes={e['ii'].nbytes()}")
+    for n_w in (1, 2, 4):
+        _, e = build_engines(bg, WalkConfig(n_walks_per_vertex=n_w,
+                                            length=10),
+                             which=("wharf", "ii"))
+        emit(f"fig8c_vary_nw/nw{n_w}/wharf", 0.0,
+             f"bytes={e['wharf'].store.nbytes_packed()}")
+        emit(f"fig8c_vary_nw/nw{n_w}/ii", 0.0, f"bytes={e['ii'].nbytes()}")
+
+    # -- §7.5 difference-encoding ablation: packed vs unpacked store bytes
+    _, e = build_engines(bg, WalkConfig(n_walks_per_vertex=2, length=10),
+                         which=("wharf",))
+    st = e["wharf"].store
+    ratio = st.nbytes_uncompressed() / st.nbytes_packed()
+    emit("sec7.5_DE_ablation", 0.0,
+         f"packed={st.nbytes_packed()};raw={st.nbytes_uncompressed()};"
+         f"ratio={ratio:.2f}")
+
+    # -- §7.5 vertex-id distribution: clustered vs x20 vs random ids
+    cfg = WalkConfig(n_walks_per_vertex=2, length=10)
+    g = build_graph(BenchGraph(log2_n=11, n_edges=20_000))
+    base_store = generate_corpus(jax.random.PRNGKey(0), g, cfg)
+    for name, factor in (("clustered", 1), ("x20", 20)):
+        # remap vertex ids by multiplying (paper's G2-x20): re-encode codes
+        f, v = pairing.szudzik_unpair(base_store.code)
+        v2 = v * jnp.uint64(factor)
+        codes = pairing.szudzik_pair(f, v2)
+        codes = jnp.sort(codes)
+        chunks = codes[: (codes.shape[0] // 128) * 128].reshape(-1, 128)
+        hi, lo = pairing.split_u64(chunks)
+        _, widths, _, _ = ops.delta_pack(hi, lo)
+        emit(f"sec7.5_id_distribution/{name}", 0.0,
+             f"packed_bytes={packed_nbytes(widths)}")
+
+
+if __name__ == "__main__":
+    run()

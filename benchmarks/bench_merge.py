@@ -1,0 +1,42 @@
+"""Paper Fig. 14 / Appendix A: on-demand vs eager merge policies —
+throughput and cumulative memory growth across batches."""
+from __future__ import annotations
+
+import time
+
+import jax
+
+from benchmarks.common import (BenchGraph, DEFAULT_CFG, build_engines, emit)
+from repro.data.streams import rmat_edges
+
+
+def run(n_batches: int = 5, batch_edges: int = 400):
+    bg = BenchGraph(log2_n=11, n_edges=30_000)
+    for policy in ("on-demand", "eager"):
+        _, engines = build_engines(bg, DEFAULT_CFG, which=("wharf",))
+        eng = engines["wharf"]
+        eng.merge_policy = policy
+        key = jax.random.PRNGKey(5)
+        total_t, total_aff = 0.0, 0
+        peak_bytes = 0
+        for i in range(n_batches):
+            key, k1, k2 = jax.random.split(key, 3)
+            src, dst = rmat_edges(k1, batch_edges, bg.log2_n)
+            t0 = time.perf_counter()
+            n_aff = eng.update_batch(k2, src, dst, None, None)
+            jax.block_until_ready(eng.store.code)
+            dt = time.perf_counter() - t0
+            if i > 0:
+                total_t += dt
+                total_aff += n_aff
+            pending = sum(int(b.owner.nbytes + b.code.nbytes + b.epoch.nbytes)
+                          for b in eng.blocks)
+            peak_bytes = max(peak_bytes,
+                             eng.store.nbytes_uncompressed() + pending)
+        wps = total_aff / total_t if total_t else 0.0
+        emit(f"fig14_merge/{policy}", 1e6 * total_t / max(total_aff, 1),
+             f"walks_per_s={wps:.0f};peak_bytes={peak_bytes}")
+
+
+if __name__ == "__main__":
+    run()

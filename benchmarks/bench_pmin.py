@@ -1,0 +1,42 @@
+"""Paper Fig. 15 (Appendix B/C): distribution of minimum affected positions
+by batch size, and throughput vs walk length."""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.common import (BenchGraph, build_engines, emit,
+                               update_throughput)
+from repro.core import WalkConfig
+from repro.core.mav import mav_dense
+from repro.data.streams import rmat_edges
+
+
+def run():
+    bg = BenchGraph(log2_n=11, n_edges=40_000)
+    cfg = WalkConfig(n_walks_per_vertex=2, length=10)
+    # -- Fig 15a: p_min histogram per batch size
+    for batch in (125, 500, 2000):
+        _, engines = build_engines(bg, cfg, which=("wharf",))
+        eng = engines["wharf"]
+        src, dst = rmat_edges(jax.random.PRNGKey(7), batch, bg.log2_n)
+        m = mav_dense(eng.store, src, dst)
+        pm = np.asarray(m.p_min)
+        pm = pm[pm < cfg.length]
+        hist = np.bincount(pm, minlength=cfg.length)
+        emit(f"fig15a_pmin/b{batch}", 0.0,
+             f"affected={len(pm)};pmin_mean={pm.mean():.2f};"
+             f"from_pos0={hist[0]}")
+
+    # -- Fig 15b: throughput vs walk length
+    for length in (5, 10, 20, 40):
+        cfg_l = WalkConfig(n_walks_per_vertex=2, length=length)
+        _, engines = build_engines(bg, cfg_l, which=("wharf", "ii"))
+        for ename, eng in engines.items():
+            wps, lat, _ = update_throughput(eng, bg, 400)
+            emit(f"fig15b_walklen/l{length}/{ename}", lat,
+                 f"walks_per_s={wps:.0f}")
+
+
+if __name__ == "__main__":
+    run()

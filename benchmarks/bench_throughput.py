@@ -1,0 +1,32 @@
+"""Paper Fig. 6 + Fig. 7: walk-update throughput & latency, Wharf vs
+II-based vs Tree-based, plus the mixed insert/delete workload."""
+from __future__ import annotations
+
+from benchmarks.common import (BenchGraph, DEFAULT_CFG, build_engines, emit,
+                               update_throughput)
+
+GRAPHS = {
+    "youtube-like": BenchGraph(log2_n=12, n_edges=12_000),   # deg ~5
+    "livejournal-like": BenchGraph(log2_n=12, n_edges=36_000),  # deg ~18
+    "orkut-like": BenchGraph(log2_n=11, n_edges=78_000),     # deg ~76
+}
+
+
+def run(batch_edges: int = 500):
+    for gname, bg in GRAPHS.items():
+        _, engines = build_engines(bg, DEFAULT_CFG)
+        for ename, eng in engines.items():
+            wps, lat, aff = update_throughput(eng, bg, batch_edges)
+            emit(f"fig6_throughput/{gname}/{ename}", lat,
+                 f"walks_per_s={wps:.0f};affected={aff:.0f}")
+    # Fig 7: mixed insertions/deletions on the livejournal-like graph
+    bg = GRAPHS["livejournal-like"]
+    _, engines = build_engines(bg, DEFAULT_CFG, which=("wharf", "ii"))
+    for ename, eng in engines.items():
+        wps, lat, aff = update_throughput(eng, bg, batch_edges, n_batches=5,
+                                          deletions=True)
+        emit(f"fig7_mixed_ID/{ename}", lat, f"walks_per_s={wps:.0f}")
+
+
+if __name__ == "__main__":
+    run()

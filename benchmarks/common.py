@@ -1,0 +1,131 @@
+"""Shared benchmark utilities: engine builders, timing, CSV emission.
+
+Sizes are scaled for CPU (the dry-run covers production scale); every bench
+prints `name,us_per_call,derived` CSV rows as required by the harness spec.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Callable, List
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import StreamingGraph, WalkConfig, generate_corpus
+from repro.core.baselines import IIEngine, TreeEngine
+from repro.core.update import WalkEngine
+from repro.core.walkers import WalkModel
+from repro.data.streams import rmat_edges
+
+ROWS: List[str] = []
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    row = f"{name},{us_per_call:.1f},{derived}"
+    ROWS.append(row)
+    print(row, flush=True)
+
+
+def timeit(fn: Callable, repeats: int = 3) -> float:
+    """Median wall time (s) of fn(); fn must block on completion."""
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+@dataclass
+class BenchGraph:
+    log2_n: int = 12
+    n_edges: int = 40_000
+    a: float = 0.5
+    b: float = 0.1
+    c: float = 0.1
+    d: float = 0.3
+
+    @property
+    def n(self) -> int:
+        return 2 ** self.log2_n
+
+
+def build_graph(bg: BenchGraph, seed: int = 0) -> StreamingGraph:
+    src, dst = rmat_edges(jax.random.PRNGKey(seed), bg.n_edges, bg.log2_n,
+                          bg.a, bg.b, bg.c, bg.d)
+    cap = 2 * (2 * bg.n_edges + 64 * bg.n)
+    cap = max(cap, 4 * bg.n_edges)
+    return StreamingGraph.from_edges(src, dst, bg.n, edge_capacity=cap)
+
+
+def build_engines(bg: BenchGraph, cfg: WalkConfig, which=("wharf", "ii",
+                                                          "tree"), seed=0):
+    g = build_graph(bg, seed)
+    out = {}
+    capacity = min(bg.n * cfg.n_walks_per_vertex, 1 << 14)
+    if "wharf" in which:
+        store = generate_corpus(jax.random.PRNGKey(seed + 1), g, cfg)
+        # output-sensitive MAV gather bound (overflow asserted after runs)
+        mav_cap = min(store.size, 1 << 17)
+        out["wharf"] = WalkEngine(graph=g, store=store, cfg=cfg,
+                                  rewalk_capacity=capacity,
+                                  mav_capacity=mav_cap)
+    if "ii" in which:
+        out["ii"] = IIEngine.create(jax.random.PRNGKey(seed + 1), g, cfg)
+        out["ii"].rewalk_capacity = capacity
+    if "tree" in which:
+        out["tree"] = TreeEngine.create(jax.random.PRNGKey(seed + 1), g, cfg)
+        out["tree"].rewalk_capacity = capacity
+    return g, out
+
+
+def update_throughput(engine, bg: BenchGraph, batch_edges: int,
+                      n_batches: int = 3, seed: int = 9,
+                      deletions: bool = False):
+    """Returns (walks_per_s, latency_us_per_walk, mean_affected)."""
+    key = jax.random.PRNGKey(seed)
+    total_t = 0.0
+    total_aff = 0
+    warmup = 2 if deletions else 1  # one compile per update signature
+    for i in range(n_batches + (warmup - 1)):
+        key, k1, k2 = jax.random.split(key, 3)
+        src, dst = rmat_edges(k1, batch_edges, bg.log2_n, bg.a, bg.b, bg.c,
+                              bg.d)
+        t0 = time.perf_counter()
+        if deletions and i % 2 == 1:
+            n_aff = engine.update_batch(k2, None, None, src, dst)
+        else:
+            n_aff = engine.update_batch(k2, src, dst, None, None)
+        jax.block_until_ready(
+            engine.store.code if hasattr(engine, "store")
+            else engine.walks if hasattr(engine, "walks") else engine.owner)
+        dt = time.perf_counter() - t0
+        if i >= warmup:  # skip compile batches
+            total_t += dt
+            total_aff += n_aff
+    if total_aff == 0:
+        return 0.0, 0.0, 0
+    walks_per_s = total_aff / total_t
+    lat_us = 1e6 * total_t / total_aff
+    if getattr(engine, "mav_overflowed", False):
+        raise RuntimeError("MAV gather capacity overflow — resize mav_capacity")
+    return walks_per_s, lat_us, total_aff / (n_batches - 1)
+
+
+def scratch_throughput(g: StreamingGraph, cfg: WalkConfig, seed=3) -> float:
+    """Walks/s of full from-scratch regeneration (paper's black line)."""
+    n_walks = g.n_vertices * cfg.n_walks_per_vertex
+
+    def gen():
+        s = generate_corpus(jax.random.PRNGKey(seed), g, cfg)
+        jax.block_until_ready(s.code)
+
+    gen()  # compile
+    return n_walks / timeit(gen, repeats=2)
+
+
+DEFAULT_CFG = WalkConfig(n_walks_per_vertex=2, length=10)
+NODE2VEC_CFG = WalkConfig(n_walks_per_vertex=2, length=10,
+                          model=WalkModel(order=2, p=0.5, q=2.0))

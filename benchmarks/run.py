@@ -1,0 +1,56 @@
+"""Benchmark harness entry point: one module per paper table/figure.
+Prints `name,us_per_call,derived` CSV (harness contract) and writes
+bench_results.csv. `--only <name>` runs a single module."""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+from benchmarks import common
+
+MODULES = [
+    "bench_throughput",   # Fig 6 + Fig 7
+    "bench_memory",       # Fig 8 + §7.5 DE + id distribution
+    "bench_scaling",      # Fig 9 + Fig 10
+    "bench_skew",         # Fig 11
+    "bench_search",       # Fig 12
+    "bench_merge",        # Fig 14 / App. A
+    "bench_pmin",         # Fig 15 / App. B-C
+    "bench_kernels",      # kernel micro-benches
+    "bench_downstream",   # Fig 13 + Fig 1
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--out", default="bench_results.csv")
+    args = ap.parse_args()
+
+    mods = [m for m in MODULES if args.only is None or m == args.only]
+    print("name,us_per_call,derived")
+    failures = []
+    for name in mods:
+        t0 = time.time()
+        print(f"# == {name} ==", flush=True)
+        try:
+            mod = __import__(f"benchmarks.{name}", fromlist=["run"])
+            mod.run()
+        except Exception as e:  # noqa: BLE001
+            failures.append((name, repr(e)))
+            traceback.print_exc()
+        print(f"# {name} done in {time.time() - t0:.1f}s", flush=True)
+    with open(args.out, "w") as f:
+        f.write("name,us_per_call,derived\n")
+        f.write("\n".join(common.ROWS) + "\n")
+    print(f"# {len(common.ROWS)} rows -> {args.out}; {len(failures)} failures")
+    for n, e in failures:
+        print(f"# FAILED {n}: {e}")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

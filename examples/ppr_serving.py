@@ -1,0 +1,37 @@
+"""Serving example: Personalized-PageRank answering over streaming walks
+(paper §7.6 / Bahmani et al.) — queries are served from the maintained
+corpus while edge batches stream in; no from-scratch recompute.
+
+  PYTHONPATH=src python examples/ppr_serving.py
+"""
+import numpy as np
+import jax
+
+from repro.core import StreamingGraph, WalkConfig, generate_corpus
+from repro.core.ppr import ppr_scores, smape
+from repro.core.update import WalkEngine
+from repro.data.streams import rmat_edges
+
+N, LOG2_N = 512, 9
+key = jax.random.PRNGKey(0)
+src, dst = rmat_edges(key, 3000, LOG2_N)
+graph = StreamingGraph.from_edges(src, dst, N, edge_capacity=32768)
+cfg = WalkConfig(n_walks_per_vertex=10, length=10)
+store = generate_corpus(jax.random.PRNGKey(1), graph, cfg)
+engine = WalkEngine(graph=graph, store=store, cfg=cfg, rewalk_capacity=N * 10)
+
+for batch in range(3):
+    k1, k2 = jax.random.split(jax.random.fold_in(key, batch))
+    ins = rmat_edges(k1, 150, LOG2_N)
+    n_aff = engine.insert_edges(k2, *ins)
+    walks = engine.walk_matrix()
+    scores = ppr_scores(walks, N, restart_prob=0.2)
+    fresh = generate_corpus(jax.random.fold_in(key, 100 + batch),
+                            engine.graph, cfg)
+    ideal_eng = WalkEngine(graph=engine.graph, store=fresh, cfg=cfg)
+    ideal = ppr_scores(ideal_eng.walk_matrix(), N, restart_prob=0.2)
+    err = float(smape(scores, ideal, min_score=0.02))
+    # serve: top-5 personalized neighbors for query vertex 7
+    top = np.argsort(-np.asarray(scores[7]))[:5]
+    print(f"batch {batch}: {n_aff} walks refreshed | "
+          f"SMAPE vs from-scratch {err:.1f}% | ppr(7) top-5 = {top.tolist()}")

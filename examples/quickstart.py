@@ -1,0 +1,44 @@
+"""Quickstart: maintain random walks on a streaming graph (the paper's core
+loop) in ~40 lines.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core import StreamingGraph, WalkConfig, generate_corpus
+from repro.core.update import WalkEngine
+from repro.data.streams import rmat_edges
+
+N_VERTICES = 1 << 10      # 1024-vertex RMAT graph
+LOG2_N = 10
+
+# 1. build the initial streaming graph + walk corpus (n_w walks per vertex)
+key = jax.random.PRNGKey(0)
+src, dst = rmat_edges(key, 4_000, LOG2_N)
+graph = StreamingGraph.from_edges(src, dst, N_VERTICES, edge_capacity=65536)
+cfg = WalkConfig(n_walks_per_vertex=4, length=16)
+store = generate_corpus(jax.random.PRNGKey(1), graph, cfg)
+print(f"graph: {int(graph.num_edges)} directed edges; "
+      f"corpus: {store.n_walks} walks x {store.length} "
+      f"({store.size} encoded triplets, "
+      f"{store.nbytes_packed() / 1e6:.1f} MB packed)")
+
+# 2. stream edge updates; Wharf re-walks only the affected walks
+engine = WalkEngine(graph=graph, store=store, cfg=cfg, rewalk_capacity=4096)
+for step in range(5):
+    k1, k2 = jax.random.split(jax.random.fold_in(key, step))
+    ins_src, ins_dst = rmat_edges(k1, 200, LOG2_N)
+    n_affected = engine.insert_edges(k2, ins_src, ins_dst)
+    print(f"batch {step}: +200 edges -> {n_affected} affected walks "
+          f"({engine.n_pending} pending version blocks)")
+
+# 3. read the corpus (triggers the on-demand merge) and traverse a walk
+walks = engine.walk_matrix()
+print("walk 7:", walks[7])
+
+# 4. FINDNEXT: the paper's indexed point lookup
+v, w, p = walks[7][3], jnp.uint32(7), jnp.uint32(3)
+nxt, found = engine.store.find_next(v, w, p)
+print(f"find_next(v={int(v)}, w=7, p=3) -> {int(nxt[0])} "
+      f"(found={bool(found[0])}, matches walk: {int(walks[7][4])})")

@@ -1,0 +1,61 @@
+"""End-to-end driver (deliverable b): streaming DeepWalk embeddings.
+
+Trains skip-gram embeddings over a Wharf-maintained walk corpus while the
+graph streams, refreshing incrementally after each batch (paper §7.6 /
+Fig. 13a), with fault-tolerant checkpointing. Runs a few hundred SGNS steps
+on CPU in ~2 minutes.
+
+  PYTHONPATH=src python examples/streaming_embeddings.py
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import StreamingGraph, WalkConfig, generate_corpus
+from repro.core.update import WalkEngine
+from repro.data.streams import cora_like
+from repro.models.embeddings import (SGNSConfig, logistic_eval, sgns_init,
+                                     train_epoch)
+from repro.train.checkpoint import CheckpointManager
+
+N = 256
+SNAPSHOTS = 4
+BATCH_EDGES = 40
+
+key = jax.random.PRNGKey(0)
+(src, dst), labels, _ = cora_like(key, n_vertices=N, n_edges=N * 4)
+n0 = src.shape[0] - SNAPSHOTS * BATCH_EDGES
+graph = StreamingGraph.from_edges(src[:n0], dst[:n0], N, edge_capacity=16384)
+wcfg = WalkConfig(n_walks_per_vertex=10, length=10)
+store = generate_corpus(jax.random.PRNGKey(1), graph, wcfg)
+engine = WalkEngine(graph=graph, store=store, cfg=wcfg,
+                    rewalk_capacity=N * 10)
+
+scfg = SGNSConfig(n_vertices=N, dim=32, window=3, n_negative=4)
+params = sgns_init(jax.random.PRNGKey(2), scfg)
+ckpt = CheckpointManager("/tmp/streaming_embeddings_ckpt")
+
+# initial training on the initial corpus
+walks = engine.walk_matrix()
+k = jax.random.PRNGKey(3)
+for _ in range(6):
+    k, kk = jax.random.split(k)
+    params, loss = train_epoch(kk, params, walks, scfg, batch=4096)
+acc = logistic_eval(np.asarray(params["in"]), np.asarray(labels))
+print(f"snapshot -1: loss={float(loss):.3f} acc={acc:.3f}")
+
+for snap in range(SNAPSHOTS):
+    lo = n0 + snap * BATCH_EDGES
+    hi = lo + BATCH_EDGES
+    n_aff = engine.insert_edges(jax.random.fold_in(key, snap),
+                                src[lo:hi], dst[lo:hi])
+    walks = engine.walk_matrix()
+    # vskip-style incremental refresh: 2 passes over the updated corpus
+    for _ in range(2):
+        k, kk = jax.random.split(k)
+        params, loss = train_epoch(kk, params, walks, scfg, batch=4096)
+    acc = logistic_eval(np.asarray(params["in"]), np.asarray(labels))
+    ckpt.save(snap, {"embeddings": params}, blocking=True)
+    print(f"snapshot {snap}: {n_aff} walks updated, loss={float(loss):.3f} "
+          f"acc={acc:.3f} (ckpt step {ckpt.latest_step()})")
+print("done; embeddings checkpointed to /tmp/streaming_embeddings_ckpt")

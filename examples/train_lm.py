@@ -1,0 +1,20 @@
+"""LM training driver on the shared substrate (smoke-scale on CPU):
+
+  PYTHONPATH=src python examples/train_lm.py --arch gemma2-2b --steps 20
+
+Uses the same fault-tolerant TrainLoop as the walk engine (checkpoint /
+restart / straggler monitor); at cluster scale the launch layer shards it
+over the production mesh (see repro/launch/dryrun.py).
+"""
+import argparse
+
+from repro.launch.train import main as train_main
+import sys
+
+
+if __name__ == "__main__":
+    if "--arch" not in sys.argv:
+        sys.argv += ["--arch", "gemma2-2b"]
+    if "--smoke" not in sys.argv:
+        sys.argv += ["--smoke"]
+    train_main()

@@ -1,0 +1,14 @@
+"""Config registry: importing this package registers all architectures."""
+from repro.configs.base import (  # noqa: F401
+    ArchSpec,
+    GNN_SHAPES,
+    LM_SHAPES,
+    RECSYS_SHAPES,
+    all_archs,
+    all_cells,
+    get_arch,
+)
+import repro.configs.lm_archs  # noqa: F401,E402
+import repro.configs.gnn_archs  # noqa: F401,E402
+import repro.configs.recsys_archs  # noqa: F401,E402
+import repro.configs.wharf_stream  # noqa: F401,E402

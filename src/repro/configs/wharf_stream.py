@@ -1,0 +1,58 @@
+"""The paper's own workload as a config: the streaming walk-update step.
+
+Not one of the 40 assigned cells but first-class in the framework: the
+distributed walk engine's batch-update step is lowered/compiled by the dry-run
+alongside the assigned archs (it is the technique under reproduction).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from repro.configs.base import ArchSpec, register
+from repro.core.corpus import WalkConfig
+from repro.core.walkers import WalkModel
+
+
+@dataclass(frozen=True)
+class WharfStreamConfig:
+    name: str = "wharf-stream"
+    n_vertices: int = 1 << 20          # er-20-scale graph (paper §7.3)
+    edge_capacity: int = 1 << 27       # ~134M directed edges (avg degree 100)
+    n_walks_per_vertex: int = 10       # paper defaults
+    length: int = 80
+    batch_edges: int = 10_000          # paper's default update batch
+    rewalk_capacity: int = 1 << 20     # affected-walk bound per batch
+    chunk_b: int = 128
+    order: int = 1
+
+    def walk_config(self) -> WalkConfig:
+        return WalkConfig(n_walks_per_vertex=self.n_walks_per_vertex,
+                          length=self.length,
+                          model=WalkModel(order=self.order),
+                          chunk_b=self.chunk_b)
+
+
+def _wharf(smoke: bool = False) -> WharfStreamConfig:
+    if smoke:
+        return WharfStreamConfig(n_vertices=64, edge_capacity=4096,
+                                 n_walks_per_vertex=2, length=8,
+                                 batch_edges=16, rewalk_capacity=128)
+    return WharfStreamConfig()
+
+
+WHARF_SHAPES = {
+    # paper-faithful baseline: eager lexsort merge every batch
+    "stream_10k": dict(kind="walk_update", batch_edges=10_000,
+                       merge_impl="lexsort", do_merge=True),
+    "stream_100k": dict(kind="walk_update", batch_edges=100_000,
+                        merge_impl="lexsort", do_merge=True),
+    # beyond-paper §Perf variants (see EXPERIMENTS.md)
+    "stream_10k_interleave": dict(kind="walk_update", batch_edges=10_000,
+                                  merge_impl="interleave", do_merge=True),
+    "stream_10k_nomerge": dict(kind="walk_update", batch_edges=10_000,
+                               merge_impl="interleave", do_merge=False),
+}
+
+register(ArchSpec(name="wharf-stream", family="wharf", make_config=_wharf,
+                  shapes=WHARF_SHAPES,
+                  notes="paper's streaming random-walk maintenance step"))

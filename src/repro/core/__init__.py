@@ -1,0 +1,23 @@
+"""Wharf core: space-efficient streaming random walks (paper's contribution).
+
+The triplet codes are 64-bit (Szudzik of two 32-bit operands, paper §4.3), so the
+core requires x64. We enable it here; model/launch code uses explicit dtypes and is
+unaffected. TPU kernels use the (hi, lo) u32 lane-pair representation instead
+(TPU has no int64) — see repro/kernels/.
+"""
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+from repro.core.pairing import (  # noqa: E402,F401
+    szudzik_pair,
+    szudzik_unpair,
+    pack_wp,
+    unpack_wp,
+    encode_triplet,
+    decode_triplet,
+    isqrt_u64,
+)
+from repro.core.graph import StreamingGraph  # noqa: E402,F401
+from repro.core.store import WalkStore  # noqa: E402,F401
+from repro.core.corpus import WalkConfig, generate_corpus, corpus_to_store  # noqa: E402,F401

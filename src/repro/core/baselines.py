@@ -1,0 +1,251 @@
+"""Baselines from paper §7.1: Inverted-Index-based and Tree-based walk stores.
+
+II-based: walks stored as dense sequences (dict walk-id -> vector, here a dense
+[n_walks, l] matrix) + an inverted index vertex -> walk ids. To build the MAV it
+must traverse each affected walk *from position 0* to locate p_min (the paper's
+Θ(Σ p_min) term), and every update rewrites both the sequences and the index.
+
+Tree-based: raw (uncompressed) triplets in balanced parallel trees — here the
+same lexsorted layout as Wharf but with three full-width columns and no pairing,
+no chunk heads and no delta compression (~3-4.4x the footprint, paper Fig. 8).
+
+Both reuse the same samplers so corpora are distribution-identical; benchmarks
+compare update cost and memory.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from functools import partial
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.corpus import WalkConfig, generate_walk_matrix, walk_start_vertex
+from repro.core.graph import StreamingGraph
+from repro.core.walkers import sample_next
+
+U32 = jnp.uint32
+I32 = jnp.int32
+
+
+# --------------------------------------------------------------------------- II
+
+
+@jax.tree_util.register_dataclass
+@dataclass(frozen=True)
+class InvertedIndex:
+    """vertex -> walk-ids index as a lexsorted (vertex, walk) pair list."""
+
+    vw: jax.Array  # uint64[T] (vertex << 32 | walk), sorted
+    offsets: jax.Array  # int32[n+1]
+
+    @staticmethod
+    def build(walks, n_vertices: int) -> "InvertedIndex":
+        n_walks, length = walks.shape
+        v = walks.reshape(-1).astype(jnp.uint64)
+        w = jnp.repeat(jnp.arange(n_walks, dtype=jnp.uint64), length)
+        vw = jnp.sort((v << jnp.uint64(32)) | w)
+        offsets = jnp.searchsorted(
+            (vw >> jnp.uint64(32)).astype(U32),
+            jnp.arange(n_vertices + 1, dtype=U32), side="left").astype(I32)
+        return InvertedIndex(vw, offsets)
+
+
+@dataclass
+class IIEngine:
+    graph: StreamingGraph
+    walks: jax.Array           # int32/uint32 [n_walks, l] dense sequences
+    index: InvertedIndex
+    cfg: WalkConfig
+    rewalk_capacity: int = 1024
+    last_n_affected: int = 0
+
+    @staticmethod
+    def create(key, graph: StreamingGraph, cfg: WalkConfig) -> "IIEngine":
+        walks = generate_walk_matrix(key, graph, cfg)
+        return IIEngine(graph, walks,
+                        InvertedIndex.build(walks, graph.n_vertices), cfg)
+
+    def update_batch(self, key, ins_src, ins_dst, del_src=None, del_dst=None):
+        e = lambda: jnp.zeros((0,), U32)
+        ins_src = e() if ins_src is None else jnp.asarray(ins_src, U32)
+        ins_dst = e() if ins_dst is None else jnp.asarray(ins_dst, U32)
+        del_src = e() if del_src is None else jnp.asarray(del_src, U32)
+        del_dst = e() if del_dst is None else jnp.asarray(del_dst, U32)
+        self.graph = self.graph.apply_batch(ins_src, ins_dst, del_src, del_dst)
+        self.walks, n_aff = _ii_update(key, self.graph, self.walks,
+                                       self.index, ins_src, ins_dst,
+                                       del_src, del_dst, self.cfg,
+                                       self.rewalk_capacity)
+        # the II must be rebuilt to reflect rewritten suffixes (paper: "has to
+        # update the walk sequences and the walk index")
+        self.index = InvertedIndex.build(self.walks, self.graph.n_vertices)
+        self.last_n_affected = int(n_aff)
+        return self.last_n_affected
+
+    def nbytes(self) -> int:
+        return int(self.walks.nbytes + self.index.vw.nbytes
+                   + self.index.offsets.nbytes)
+
+
+@partial(jax.jit, static_argnames=("cfg", "capacity"))
+def _ii_update(key, graph, walks, index, ins_src, ins_dst, del_src, del_dst,
+               cfg: WalkConfig, capacity: int):
+    n_walks, length = walks.shape
+    touched = jnp.zeros((graph.n_vertices,), bool)
+    for arr in (ins_src, ins_dst, del_src, del_dst):
+        if arr.shape[0] > 0:
+            touched = touched.at[arr.astype(I32)].set(True)
+    # MAV via the paper's II procedure: scan each affected walk FROM THE FRONT.
+    hit = touched[walks.astype(I32)]                       # [n_walks, l]
+    p_min = jnp.where(hit.any(axis=1),
+                      jnp.argmax(hit, axis=1), length).astype(I32)
+    affected = p_min < length
+    (ids,) = jnp.nonzero(affected, size=capacity, fill_value=0)
+    lane_valid = jnp.arange(capacity) < jnp.sum(affected)
+    pm = p_min[ids]
+    cur0 = walks[ids, jnp.maximum(pm, 0)].astype(U32)
+    prev0 = walks[ids, jnp.maximum(pm - 1, 0)].astype(U32)
+
+    def step(carry, inp):
+        cur, prev = carry
+        p, kp = inp
+        cur = jnp.where(p == pm, walks[ids, jnp.clip(p, 0, length - 1)].astype(U32), cur)
+        nxt = sample_next(kp, graph, cur, prev, cfg.model)
+        newv = jnp.where((p > pm) & lane_valid, nxt, 0)
+        write = (p > pm) & lane_valid
+        prev_new = jnp.where(p >= pm, cur, prev)
+        cur_new = jnp.where(p >= pm, nxt, cur)
+        return (cur_new, prev_new), (newv, write)
+
+    keys = jax.random.split(key, length)
+    ps = jnp.arange(length, dtype=I32)
+    (_, _), (newvs, writes) = jax.lax.scan(step, (cur0, prev0), (ps, keys))
+    newvs = newvs.T  # [capacity, l]
+    writes = writes.T
+    rows = jnp.repeat(ids, length).reshape(capacity, length)
+    cols = jnp.tile(ps, capacity).reshape(capacity, length)
+    # route non-writing lanes out of bounds and drop them (avoids scatter races)
+    rows = jnp.where(writes, rows, n_walks)
+    walks = walks.at[rows.reshape(-1), cols.reshape(-1)].set(
+        newvs.reshape(-1).astype(walks.dtype), mode="drop")
+    return walks, jnp.sum(affected)
+
+
+# ------------------------------------------------------------------------ Tree
+
+
+@dataclass
+class TreeEngine:
+    """Tree-based baseline: uncompressed triplet columns, lexsorted.
+
+    Mirrors Wharf's update path but stores (owner, walk, pos, next) as four
+    full-width columns (no pairing, no chunks, no delta coding) and re-walks
+    obsolete parts to remove them (the paper notes this costs it throughput).
+    """
+
+    graph: StreamingGraph
+    owner: jax.Array  # uint32[T]
+    walk: jax.Array   # uint32[T]
+    pos: jax.Array    # uint32[T]
+    nxt: jax.Array    # uint32[T]
+    cfg: WalkConfig
+    rewalk_capacity: int = 1024
+
+    @staticmethod
+    def create(key, graph: StreamingGraph, cfg: WalkConfig) -> "TreeEngine":
+        walks = generate_walk_matrix(key, graph, cfg)
+        n_walks, length = walks.shape
+        owner = walks.reshape(-1).astype(U32)
+        w = jnp.repeat(jnp.arange(n_walks, dtype=U32), length)
+        p = jnp.tile(jnp.arange(length, dtype=U32), n_walks)
+        nx = jnp.concatenate([walks[:, 1:], walks[:, -1:]], axis=1).reshape(-1).astype(U32)
+        order = jnp.lexsort((p, w, owner))
+        return TreeEngine(graph, owner[order], w[order], p[order], nx[order], cfg)
+
+    def update_batch(self, key, ins_src, ins_dst, del_src=None, del_dst=None):
+        e = lambda: jnp.zeros((0,), U32)
+        ins_src = e() if ins_src is None else jnp.asarray(ins_src, U32)
+        ins_dst = e() if ins_dst is None else jnp.asarray(ins_dst, U32)
+        del_src = e() if del_src is None else jnp.asarray(del_src, U32)
+        del_dst = e() if del_dst is None else jnp.asarray(del_dst, U32)
+        self.graph = self.graph.apply_batch(ins_src, ins_dst, del_src, del_dst)
+        (self.owner, self.walk, self.pos, self.nxt), n_aff = _tree_update(
+            key, self.graph, self.owner, self.walk, self.pos, self.nxt,
+            ins_src, ins_dst, del_src, del_dst, self.cfg, self.rewalk_capacity)
+        return int(n_aff)
+
+    def nbytes(self) -> int:
+        return int(self.owner.nbytes + self.walk.nbytes + self.pos.nbytes
+                   + self.nxt.nbytes)
+
+
+@partial(jax.jit, static_argnames=("cfg", "capacity"))
+def _tree_update(key, graph, owner, walk, pos, nxt, ins_src, ins_dst,
+                 del_src, del_dst, cfg: WalkConfig, capacity: int):
+    length = cfg.length
+    n_walks = int(walk.shape[0]) // length
+    touched = jnp.zeros((graph.n_vertices,), bool)
+    for arr in (ins_src, ins_dst, del_src, del_dst):
+        if arr.shape[0] > 0:
+            touched = touched.at[arr.astype(I32)].set(True)
+    hit = touched[owner.astype(I32)]
+    big = jnp.asarray(1 << 32, jnp.int64)
+    keyed = jnp.where(hit, pos.astype(jnp.int64) * big + owner.astype(jnp.int64),
+                      jnp.asarray(length, jnp.int64) * big)
+    best = jax.ops.segment_min(keyed, walk.astype(I32), num_segments=n_walks)
+    anyh = jax.ops.segment_max(hit.astype(I32), walk.astype(I32),
+                               num_segments=n_walks) > 0
+    p_min = jnp.where(anyh, (best // big).astype(I32), length)
+    v_min = jnp.where(anyh, (best % big).astype(U32), 0)
+    affected = p_min < length
+    (ids,) = jnp.nonzero(affected, size=capacity, fill_value=0)
+    lane_valid = jnp.arange(capacity) < jnp.sum(affected)
+    pm = p_min[ids]
+    vm = v_min[ids]
+    prev0 = vm
+
+    def step(carry, inp):
+        cur, prev = carry
+        p, kp = inp
+        cur = jnp.where(p == pm, vm, cur)
+        s = sample_next(kp, graph, cur, prev, cfg.model)
+        is_term = p == length - 1
+        nxt_eff = jnp.where(is_term, cur, s)
+        emit = lane_valid & (p >= pm)
+        prev_new = jnp.where(p >= pm, cur, prev)
+        cur_new = jnp.where((p >= pm) & ~is_term, s, cur)
+        return (cur_new, prev_new), (cur, nxt_eff, emit)
+
+    keys = jax.random.split(key, length)
+    ps = jnp.arange(length, dtype=I32)
+    (_, _), (owners_new, nxts_new, emits) = jax.lax.scan(step, (vm, prev0), (ps, keys))
+    owners_new, nxts_new, emits = owners_new.T, nxts_new.T, emits.T
+
+    # the tree baseline rewrites in place via a sort-merge keyed by (walk, pos):
+    # obsolete rows (same (walk,pos), older) evicted by keep-newest.
+    w_new = jnp.repeat(ids.astype(U32), length)
+    p_new = jnp.tile(ps.astype(U32), capacity)
+    slot_old = walk.astype(jnp.int64) * length + pos.astype(jnp.int64)
+    slot_new = w_new.astype(jnp.int64) * length + p_new.astype(jnp.int64)
+    slot_new = jnp.where(emits.reshape(-1), slot_new, jnp.asarray(-1, jnp.int64))
+    stamp_old = jnp.zeros_like(slot_old, dtype=I32)
+    stamp_new = jnp.ones((slot_new.shape[0],), I32)
+    slots = jnp.concatenate([slot_old, slot_new])
+    stamps = jnp.concatenate([stamp_old, stamp_new])
+    own = jnp.concatenate([owner, owners_new.reshape(-1).astype(U32)])
+    wlk = jnp.concatenate([walk, w_new])
+    pp = jnp.concatenate([pos, p_new])
+    nn = jnp.concatenate([nxt, nxts_new.reshape(-1).astype(U32)])
+    # keep-newest per slot: sort by (slot, -stamp); first occurrence per slot wins
+    order = jnp.lexsort((-stamps, slots))
+    slots_s = slots[order]
+    first = jnp.concatenate([jnp.asarray([True]), slots_s[1:] != slots_s[:-1]])
+    keep = first & (slots_s >= 0)
+    t = owner.shape[0]
+    (sel,) = jnp.nonzero(keep, size=t, fill_value=0)
+    pick = order[sel]
+    own, wlk, pp, nn = own[pick], wlk[pick], pp[pick], nn[pick]
+    order2 = jnp.lexsort((pp, wlk, own))
+    return (own[order2], wlk[order2], pp[order2], nn[order2]), jnp.sum(affected)

@@ -1,0 +1,78 @@
+"""Walk-corpus generation (paper §3.2) and conversion into the WalkStore.
+
+A corpus has n_w walks per vertex, each of length l. Walk w starts at vertex
+w // n_w by construction (so walk starts never need to be stored — `traverse`
+can always re-derive a walk from its id). Isolated vertices yield self-walks,
+which become real walks the moment their vertex gains an edge (the update path
+marks them affected with p_min = 0).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import pairing
+from repro.core.graph import StreamingGraph
+from repro.core.store import WalkStore
+from repro.core.walkers import WalkModel, DEEPWALK, sample_next
+
+U64 = jnp.uint64
+U32 = jnp.uint32
+
+
+class WalkConfig(NamedTuple):
+    n_walks_per_vertex: int = 10   # n_w (paper default)
+    length: int = 80               # l   (paper default)
+    model: WalkModel = DEEPWALK
+    chunk_b: int = 128
+
+
+def walk_start_vertex(w, n_w: int):
+    return (jnp.asarray(w, U32) // jnp.asarray(n_w, U32)).astype(U32)
+
+
+def generate_walk_matrix(key, graph: StreamingGraph, cfg: WalkConfig):
+    """Dense [n_walks, l] walk matrix sampled from scratch on `graph`."""
+    n_walks = graph.n_vertices * cfg.n_walks_per_vertex
+    start = walk_start_vertex(jnp.arange(n_walks, dtype=U32), cfg.n_walks_per_vertex)
+
+    def step(carry, k):
+        cur, prev = carry
+        nxt = sample_next(k, graph, cur, prev, cfg.model)
+        return (nxt, cur), nxt
+
+    keys = jax.random.split(key, cfg.length - 1)
+    (_, _), rest = jax.lax.scan(step, (start, start), keys)
+    return jnp.concatenate([start[None, :], rest], axis=0).T  # [n_walks, l]
+
+
+def matrix_to_triplets(walks, length: int):
+    """Dense walk matrix -> (owner, code) triplet arrays (paper §4.2).
+
+    Triplet at (w, p): owner = walks[w, p], next = walks[w, p+1] (p < l-1) or
+    walks[w, l-1] itself for the terminal slot.
+    """
+    n_walks = walks.shape[0]
+    w_ids = jnp.repeat(jnp.arange(n_walks, dtype=U64), length)
+    p_ids = jnp.tile(jnp.arange(length, dtype=U64), n_walks)
+    owner = walks.reshape(-1).astype(U32)
+    nxt = jnp.concatenate([walks[:, 1:], walks[:, -1:]], axis=1).reshape(-1)
+    code = pairing.encode_triplet(w_ids, p_ids, nxt.astype(U64), length)
+    return owner, code
+
+
+def corpus_to_store(walks, cfg: WalkConfig, n_vertices: int) -> WalkStore:
+    n_walks, length = walks.shape
+    owner, code = matrix_to_triplets(walks, length)
+    epoch = jnp.zeros((owner.shape[0],), U32)
+    slot_epoch = jnp.zeros((n_walks * length,), U32)
+    return WalkStore.build(owner, code, epoch, slot_epoch, length, n_walks,
+                           n_vertices, chunk_b=cfg.chunk_b)
+
+
+def generate_corpus(key, graph: StreamingGraph, cfg: WalkConfig) -> WalkStore:
+    """From-scratch corpus generation + store build (paper's initial state)."""
+    walks = generate_walk_matrix(key, graph, cfg)
+    return corpus_to_store(walks, cfg, graph.n_vertices)

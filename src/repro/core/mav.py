@@ -1,0 +1,114 @@
+"""Map of Affected Vertices (paper §6.1, Def. 3).
+
+For a batch of edge updates, MAV maps each affected walk w to {v_min, p_min}:
+the first affected vertex in w and its position. Both insertion and deletion of
+edge (s, d) mark every walk containing s (and, undirected, d) as affected at the
+position where that vertex occurs.
+
+Two implementations, mirroring the paper's simple-vs-pruned study:
+  * mav_dense   — O(T) masked scan over the whole store (the II-like fallback).
+  * mav_indexed — output-sensitive: gathers only the affected vertices' segments
+    via the CSR offsets (the hybrid-tree's "only search the source vertex's
+    walk-tree" property), with a static gather capacity.
+Both return identical results (property-tested).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import pairing
+from repro.core.store import WalkStore
+
+U64 = jnp.uint64
+U32 = jnp.uint32
+I32 = jnp.int32
+
+
+class MAV(NamedTuple):
+    p_min: jax.Array   # int32[n_walks]; == l  -> walk unaffected
+    v_min: jax.Array   # uint32[n_walks]; vertex at p_min (Def. 3 value)
+
+
+def affected_mask(mav: MAV, length: int):
+    return mav.p_min < length
+
+
+def _touched_vertices(store: WalkStore, ins_src, ins_dst, del_src, del_dst):
+    touched = jnp.zeros((store.n_vertices,), bool)
+    for arr in (ins_src, ins_dst, del_src, del_dst):
+        if arr is not None and arr.shape[0] > 0:
+            touched = touched.at[jnp.asarray(arr, I32)].set(True)
+    return touched
+
+
+def _pmin_from_wpo(w, p, owner, epoch, slot_epoch, touched, valid,
+                   length: int, n_walks: int) -> MAV:
+    """MAV reduction from already-decoded (w, p, owner) entry columns."""
+    slot = jnp.clip(w * length + p, 0, n_walks * length - 1)
+    live = epoch == slot_epoch[slot]
+    hit = valid & live & touched
+    w_safe = jnp.where(hit, w, 0)
+    # composite key p * n_vertices + owner -> argmin(p) carrying v at p_min
+    big = jnp.asarray(1 << 32, jnp.int64)
+    keyed = jnp.where(hit, p.astype(jnp.int64) * big + owner.astype(jnp.int64),
+                      jnp.asarray(length, jnp.int64) * big)
+    best = jax.ops.segment_min(keyed, w_safe, num_segments=n_walks)
+    # walks with no hit anywhere still need p_min = l
+    any_hit = jax.ops.segment_max(hit.astype(I32), w_safe, num_segments=n_walks) > 0
+    p_min = jnp.where(any_hit, (best // big).astype(I32), length)
+    v_min = jnp.where(any_hit, (best % big).astype(U32), 0)
+    return MAV(p_min=p_min, v_min=v_min)
+
+
+def _pmin_from_entries(owner, code, epoch, slot_epoch, touched, valid,
+                       length: int, n_walks: int) -> MAV:
+    f, _ = pairing.szudzik_unpair(code)
+    w = (f // jnp.asarray(length, U64)).astype(I32)
+    p = (f % jnp.asarray(length, U64)).astype(I32)
+    return _pmin_from_wpo(w, p, owner, epoch, slot_epoch, touched, valid,
+                          length, n_walks)
+
+
+def mav_dense(store: WalkStore, ins_src, ins_dst, del_src=None, del_dst=None) -> MAV:
+    """O(T) masked scan (vectorized; used as oracle + II-like baseline)."""
+    touched_v = _touched_vertices(store, ins_src, ins_dst, del_src, del_dst)
+    touched = touched_v[store.owner.astype(I32)]
+    valid = jnp.ones_like(touched)
+    return _pmin_from_entries(store.owner, store.code, store.epoch,
+                              store.slot_epoch, touched, valid,
+                              store.length, store.n_walks)
+
+
+def mav_indexed(store: WalkStore, ins_src, ins_dst, del_src=None, del_dst=None,
+                gather_capacity: int | None = None) -> MAV:
+    """Output-sensitive MAV: gather only affected vertices' walk-tree segments.
+
+    gather_capacity bounds the total number of gathered triplets (static shape);
+    it must be >= sum of affected segment lengths (checked by callers/tests).
+    """
+    n = store.n_vertices
+    touched_v = _touched_vertices(store, ins_src, ins_dst, del_src, del_dst)
+    seg_len = store.offsets[1:] - store.offsets[:-1]
+    aff_len = jnp.where(touched_v, seg_len, 0)
+    if gather_capacity is None:
+        gather_capacity = store.size
+    # prefix layout of gathered segments
+    out_start = jnp.concatenate(
+        [jnp.zeros((1,), I32), jnp.cumsum(aff_len).astype(I32)])
+    total = out_start[-1]
+    # for each output slot, which vertex segment does it come from?
+    slot_ids = jnp.arange(gather_capacity, dtype=I32)
+    seg_of = jnp.searchsorted(out_start[1:], slot_ids, side="right").astype(I32)
+    seg_of = jnp.clip(seg_of, 0, n - 1)
+    within = slot_ids - out_start[seg_of]
+    src_idx = jnp.clip(store.offsets[seg_of] + within, 0, store.size - 1)
+    valid = slot_ids < total
+    owner = store.owner[src_idx]
+    code = store.code[src_idx]
+    epoch = store.epoch[src_idx]
+    touched = touched_v[owner.astype(I32)] & valid
+    return _pmin_from_entries(owner, code, epoch, store.slot_epoch, touched,
+                              valid, store.length, store.n_walks)

@@ -1,0 +1,229 @@
+"""WalkStore — the hybrid-tree (paper §4) adapted to TPU-resident flat arrays.
+
+Paper structure                      ->  TPU-native structure (this file)
+-----------------------------------------------------------------------------
+vertex-tree (outer PAM)              ->  `offsets[n+1]` CSR over owner vertex
+walk-tree of v (inner C-tree)        ->  segment [offsets[v], offsets[v+1]) of the
+                                         (owner, code)-lexsorted flat code array
+C-tree chunks (size ~b) + heads      ->  fixed b-wide chunks; `chunk_first/last`
+                                         head arrays (O(1) c_first/c_last, §5.2)
+per-walk-tree {v_min, v_max}         ->  `vmin/vmax[n]` (search bounds, §5.1)
+walk-tree *versions* (on-demand      ->  `epoch[T]` stamps + dense `slot_epoch`
+merge, §6.2/App. A)                      (latest version per corpus slot)
+variable-byte difference encoding    ->  frame-of-reference bit-packing (§4.4;
+                                         branch-free decode — see pack_chunks)
+
+Invariant: for a graph with `n_cap` addressable vertices the corpus holds exactly
+T = n_cap * n_w * l triplets — re-walks replace slots one-for-one, so every array
+is static-shaped. Snapshots (paper's PF-tree motivation) are free: JAX arrays are
+immutable, any reference is a serializable snapshot.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import pairing
+from repro.core.utils import seg_searchsorted
+
+U64 = jnp.uint64
+U32 = jnp.uint32
+I32 = jnp.int32
+
+PAD_EPOCH = jnp.asarray(0xFFFFFFFF, U32)
+
+
+@jax.tree_util.register_dataclass
+@dataclass(frozen=True)
+class WalkStore:
+    owner: jax.Array        # uint32[T] vertex at (w, p); primary sort key
+    code: jax.Array         # uint64[T] Szudzik codes; secondary sort key
+    epoch: jax.Array        # uint32[T] version stamp of each entry
+    offsets: jax.Array      # int32[n+1] per-vertex segment bounds
+    vmin: jax.Array         # uint32[n] min next-vertex id per vertex (paper §5.1)
+    vmax: jax.Array         # uint32[n]
+    chunk_first: jax.Array  # uint64[C] head metadata (paper §5.2)
+    chunk_last: jax.Array   # uint64[C]
+    slot_epoch: jax.Array   # uint32[n_walks * l] latest version per corpus slot
+    length: int = dataclasses.field(metadata=dict(static=True))
+    n_walks: int = dataclasses.field(metadata=dict(static=True))
+    n_vertices: int = dataclasses.field(metadata=dict(static=True))
+    chunk_b: int = dataclasses.field(metadata=dict(static=True))
+
+    def replace(self, **kw) -> "WalkStore":
+        return dataclasses.replace(self, **kw)
+
+    # ------------------------------------------------------------------ build
+
+    @staticmethod
+    def build(owner, code, epoch, slot_epoch, length: int, n_walks: int,
+              n_vertices: int, chunk_b: int = 128) -> "WalkStore":
+        """Sort by (owner, code) and derive all index metadata."""
+        order = jnp.lexsort((code, owner))
+        return WalkStore.from_sorted(
+            owner[order].astype(U32), code[order], epoch[order].astype(U32),
+            slot_epoch, length, n_walks, n_vertices, chunk_b)
+
+    @staticmethod
+    def from_sorted(owner, code, epoch, slot_epoch, length: int,
+                    n_walks: int, n_vertices: int,
+                    chunk_b: int = 128) -> "WalkStore":
+        """Derive metadata from an ALREADY (owner, code)-sorted stream
+        (used by the O(T) interleave merge — §Perf)."""
+        offsets = jnp.searchsorted(
+            owner, jnp.arange(n_vertices + 1, dtype=U32), side="left"
+        ).astype(I32)
+        _, v_next = pairing.szudzik_unpair(code)
+        v_next32 = v_next.astype(U32)
+        vmin = jax.ops.segment_min(v_next32, owner.astype(I32),
+                                   num_segments=n_vertices)
+        vmax = jax.ops.segment_max(v_next32, owner.astype(I32),
+                                   num_segments=n_vertices)
+        chunk_first, chunk_last = _chunk_heads(code, chunk_b)
+        return WalkStore(owner, code, epoch, offsets, vmin, vmax,
+                         chunk_first, chunk_last, slot_epoch,
+                         length, n_walks, n_vertices, chunk_b)
+
+    @property
+    def size(self) -> int:
+        return self.code.shape[0]
+
+    # ------------------------------------------------------------- traversal
+
+    def find_next(self, v, w, p):
+        """FINDNEXT (paper Alg. 1), batched over query arrays.
+
+        Returns (v_next uint32, found bool). Implements the §5.1 pruned range
+        search: candidates limited to [lb, ub] = [<f, vmin[v]>, <f, vmax[v]>]
+        within v's segment; each candidate in the range is decoded and tested
+        (the output-sensitive `k` term of §5.3). Liveness is enforced via the
+        slot-epoch check so stale pre-merge versions are skipped.
+        """
+        v = jnp.asarray(v, U32)
+        w64 = jnp.asarray(w, U64)
+        p64 = jnp.asarray(p, U64)
+        f = pairing.pack_wp(w64, p64, self.length)
+        lb, ub = pairing.search_range(f, self.vmin[v], self.vmax[v])
+        seg_lo = self.offsets[v]
+        seg_hi = self.offsets[v + jnp.asarray(1, U32)]
+        lo = seg_searchsorted(self.code, seg_lo, seg_hi, lb, side="left")
+        hi = seg_searchsorted(self.code, seg_lo, seg_hi, ub, side="right")
+        slot = (w64 * jnp.asarray(self.length, U64) + p64).astype(I32)
+        want_epoch = self.slot_epoch[slot]
+
+        def scan_one(lo1, hi1, f1, we1):
+            def cond(state):
+                i, found, _ = state
+                return (~found) & (i < hi1)
+
+            def body(state):
+                i, _, _ = state
+                c = self.code[jnp.clip(i, 0, self.size - 1)]
+                cf, cv = pairing.szudzik_unpair(c)
+                ok = (cf == f1) & (self.epoch[jnp.clip(i, 0, self.size - 1)] == we1)
+                return (i + 1, ok, jnp.where(ok, cv.astype(U32), jnp.asarray(0, U32)))
+
+            _, found, out = jax.lax.while_loop(
+                cond, body, (lo1, False, jnp.asarray(0, U32)))
+            return out, found
+
+        return jax.vmap(scan_one)(jnp.atleast_1d(lo), jnp.atleast_1d(hi),
+                                  jnp.atleast_1d(f), jnp.atleast_1d(want_epoch))
+
+    def find_next_simple(self, v, w, p):
+        """Baseline 'simple search' (paper §7.5): decode the whole segment."""
+        v = jnp.asarray(v, U32)
+        f = pairing.pack_wp(jnp.asarray(w, U64), jnp.asarray(p, U64), self.length)
+        slot = (jnp.asarray(w, U64) * jnp.asarray(self.length, U64)
+                + jnp.asarray(p, U64)).astype(I32)
+        want_epoch = self.slot_epoch[slot]
+        seg_lo = self.offsets[v]
+        seg_hi = self.offsets[v + jnp.asarray(1, U32)]
+
+        def scan_one(lo1, hi1, f1, we1):
+            def body(i, state):
+                found, out = state
+                c = self.code[jnp.clip(i, 0, self.size - 1)]
+                cf, cv = pairing.szudzik_unpair(c)
+                ok = ((i >= lo1) & (i < hi1) & (cf == f1)
+                      & (self.epoch[jnp.clip(i, 0, self.size - 1)] == we1))
+                return (found | ok, jnp.where(ok, cv.astype(U32), out))
+
+            return jax.lax.fori_loop(
+                0, self.size, body, (False, jnp.asarray(0, U32)))
+
+        found, out = jax.vmap(scan_one)(
+            jnp.atleast_1d(seg_lo), jnp.atleast_1d(seg_hi),
+            jnp.atleast_1d(f), jnp.atleast_1d(want_epoch))
+        return out, found
+
+    def traverse(self, w, start_vertex, upto: int):
+        """Reconstruct walk w's vertices [0..upto] by repeated FINDNEXT."""
+        w = jnp.atleast_1d(jnp.asarray(w, U32))
+        cur = jnp.atleast_1d(jnp.asarray(start_vertex, U32))
+
+        def step(cur, p):
+            nxt, found = self.find_next(cur, w, jnp.full_like(w, p))
+            nxt = jnp.where(found, nxt, cur)
+            return nxt, cur
+
+        out, path = jax.lax.scan(step, cur, jnp.arange(upto, dtype=U32))
+        return jnp.moveaxis(jnp.concatenate([path, out[None]], axis=0), 0, 1)
+
+    # ------------------------------------------------------------- memory
+
+    def nbytes_uncompressed(self) -> int:
+        """Tree-based-equivalent footprint: raw codes + index metadata."""
+        return int(self.owner.nbytes + self.code.nbytes + self.epoch.nbytes
+                   + self.offsets.nbytes + self.vmin.nbytes + self.vmax.nbytes
+                   + self.chunk_first.nbytes + self.chunk_last.nbytes)
+
+    def packed_rep(self):
+        """Frame-of-reference bit-packed chunks (paper §4.4 adapted; host-side).
+
+        Returns (anchors u64[C], widths u8[C], words u32[total]) and is the
+        representation whose size the memory benchmarks report. Variable-byte is
+        byte-serial; FOR packing keeps the same delta-compression win with a
+        branch-free vectorized decode (see kernels/delta.py).
+        """
+        code = np.asarray(self.code)
+        b = self.chunk_b
+        pad = (-len(code)) % b
+        if pad:
+            code = np.concatenate([code, np.full(pad, code[-1], np.uint64)])
+        chunks = code.reshape(-1, b)
+        anchors = chunks[:, 0].copy()
+        deltas = chunks.astype(np.uint64)
+        deltas[:, 1:] = chunks[:, 1:] - chunks[:, :-1]
+        deltas[:, 0] = 0
+        # NOTE: deltas within a chunk are non-negative (codes sorted within each
+        # owner segment; across segment boundaries owner-major order can break
+        # monotonicity, so those chunks fall back to full width).
+        mono = np.all(chunks[:, 1:] >= chunks[:, :-1], axis=1)
+        maxd = deltas.max(axis=1)
+        widths = np.where(mono, np.ceil(np.log2(maxd.astype(np.float64) + 2)),
+                          64).astype(np.uint8)
+        total_bits = int((widths.astype(np.int64) * (b - 1)).sum())
+        n_words = (total_bits + 31) // 32
+        return anchors, widths, n_words
+
+    def nbytes_packed(self) -> int:
+        anchors, widths, n_words = self.packed_rep()
+        meta = (self.offsets.nbytes + self.vmin.nbytes + self.vmax.nbytes
+                + anchors.nbytes + widths.nbytes
+                + self.chunk_first.nbytes + self.chunk_last.nbytes)
+        return int(n_words * 4 + meta)
+
+
+def _chunk_heads(code, b: int) -> Tuple[jax.Array, jax.Array]:
+    t = code.shape[0]
+    n_chunks = max(1, -(-t // b))
+    pad = n_chunks * b - t
+    padded = jnp.concatenate([code, jnp.full((pad,), code[-1], U64)]) if pad else code
+    chunks = padded.reshape(n_chunks, b)
+    return chunks[:, 0], chunks[:, -1]

@@ -1,0 +1,36 @@
+"""Vectorized search/compaction helpers shared by the Wharf core."""
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+I32 = jnp.int32
+
+
+def seg_searchsorted(sorted_vals, lo, hi, target, side: str = "left"):
+    """Per-query binary search of `target` within [lo, hi) of `sorted_vals`.
+
+    sorted_vals must be sorted within each queried segment. lo/hi/target are
+    equal-shaped query arrays. Fixed-iteration (log2 N) branch-free binary search —
+    the vectorized analogue of the paper's root-to-leaf tree descent (§5.3).
+    """
+    n = sorted_vals.shape[0]
+    iters = max(1, math.ceil(math.log2(max(n, 2))) + 1)
+    lo = jnp.asarray(lo, I32)
+    hi = jnp.asarray(hi, I32)
+    for _ in range(iters):
+        mid = (lo + hi) >> 1
+        v = sorted_vals[jnp.clip(mid, 0, n - 1)]
+        go_right = (v < target) if side == "left" else (v <= target)
+        cont = lo < hi
+        lo = jnp.where(cont & go_right, mid + 1, lo)
+        hi = jnp.where(cont & ~go_right, mid, hi)
+    return lo
+
+
+def compact_nonzero(mask, size: int, fill_value: int = 0):
+    """Indices of True entries, padded to `size` (static shape)."""
+    (idx,) = jnp.nonzero(mask, size=size, fill_value=fill_value)
+    valid = jnp.arange(size) < jnp.sum(mask)
+    return idx, valid

@@ -1,0 +1,73 @@
+"""Random-walk models (paper §3.2): DeepWalk (1st order) and node2vec (2nd order).
+
+DeepWalk: uniform over current neighbors.
+node2vec(p, q): sampled by rejection (the MH/alias-free scheme used by KnightKing
+and cited in paper Alg. 2's SAMPLENEXT note): propose a uniform neighbor x of v and
+accept with probability alpha(prev, x) / alpha_max where
+
+    alpha = 1/p  if x == prev
+            1    if x is a neighbor of prev
+            1/q  otherwise.
+
+On TPU a data-dependent while_loop per lane would serialize the VPU, so we run a
+fixed number of vectorized trials (accept-first) with a guaranteed fallback to the
+last proposal; with K=8 trials the residual bias is < (1-amin/amax)^8 and the
+statistical-indistinguishability tests (chi-square) pass. Documented in DESIGN.md.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+U32 = jnp.uint32
+
+
+class WalkModel(NamedTuple):
+    """order=1 -> DeepWalk; order=2 -> node2vec(p, q)."""
+
+    order: int = 1
+    p: float = 1.0
+    q: float = 1.0
+    n_trials: int = 8  # rejection trials for 2nd-order sampling
+
+
+DEEPWALK = WalkModel(order=1)
+
+
+def deepwalk_step(key, graph, v):
+    """v: uint32[B] current vertices -> uint32[B] next vertices."""
+    return graph.sample_neighbor(key, v)
+
+
+@partial(jax.jit, static_argnames=("n_trials",))
+def _node2vec_step(key, graph, v, prev, p, q, n_trials):
+    b = v.shape[0]
+    inv_p = 1.0 / p
+    inv_q = 1.0 / q
+    a_max = jnp.maximum(jnp.maximum(inv_p, 1.0), inv_q)
+
+    def trial(carry, k):
+        chosen, done = carry
+        k1, k2 = jax.random.split(k)
+        x = graph.sample_neighbor(k1, v)
+        alpha = jnp.where(
+            x == prev, inv_p,
+            jnp.where(graph.has_edge(prev, x), 1.0, inv_q))
+        accept = jax.random.uniform(k2, (b,)) * a_max <= alpha
+        # first accepted proposal wins; last proposal is the fallback
+        chosen = jnp.where(done, chosen, x)
+        return (chosen, done | accept), None
+
+    keys = jax.random.split(key, n_trials)
+    (chosen, _), _ = jax.lax.scan(trial, (v, jnp.zeros((b,), bool)), keys)
+    return chosen
+
+
+def sample_next(key, graph, v, prev, model: WalkModel):
+    """SAMPLENEXT (paper Alg. 2 line 8), vectorized over a batch of walkers."""
+    if model.order == 1:
+        return deepwalk_step(key, graph, v)
+    return _node2vec_step(key, graph, v, prev, model.p, model.q, model.n_trials)

@@ -1,0 +1,97 @@
+"""Synthetic graph-stream generators (paper §7.1: R-MAT / Erdős–Rényi / skew).
+
+R-MAT(a, b, c, d): recursive quadrant sampling; the paper uses
+  * update batches: a=0.5, b=c=0.1, d=0.3 (as in Aspen)
+  * er-k graphs:    a=b=c=d=0.25, avg degree 100 (TrillionG settings)
+  * sg-s skew:      b=c=0.25, d/a ratio tuned so bottom-right mass ≈ s x top-left
+
+All generators are jittable and deterministic in the key.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+U32 = jnp.uint32
+
+
+@partial(jax.jit, static_argnames=("n_edges", "log2_n"))
+def rmat_edges(key, n_edges: int, log2_n: int,
+               a: float = 0.5, b: float = 0.1, c: float = 0.1, d: float = 0.3):
+    """Sample n_edges (src, dst) pairs from R-MAT over 2^log2_n vertices."""
+    probs = jnp.asarray([a, b, c, d])
+    keys = jax.random.split(key, log2_n)
+
+    def level(carry, k):
+        src, dst = carry
+        q = jax.random.categorical(k, jnp.log(probs), shape=(n_edges,))
+        src = (src << 1) | (q >= 2).astype(U32)
+        dst = (dst << 1) | (q % 2).astype(U32)
+        return (src, dst), None
+
+    z = jnp.zeros((n_edges,), U32)
+    (src, dst), _ = jax.lax.scan(level, (z, z), keys)
+    return src, dst
+
+
+def er_edges(key, n_edges: int, log2_n: int):
+    """Erdős–Rényi-style batch (uniform R-MAT quadrants, paper's er-k)."""
+    return rmat_edges(key, n_edges, log2_n, 0.25, 0.25, 0.25, 0.25)
+
+
+def skewed_params(s: float):
+    """sg-s graphs: b=c=0.25, bottom-right ≈ s x top-left (paper §7.1)."""
+    a = 0.5 / (1.0 + s)
+    d = s * a
+    return a, 0.25, 0.25, d
+
+
+def skewed_edges(key, n_edges: int, log2_n: int, s: float):
+    a, b, c, d = skewed_params(s)
+    return rmat_edges(key, n_edges, log2_n, a, b, c, d)
+
+
+def cora_like(key, n_vertices: int = 2708, n_edges: int = 5429,
+              n_classes: int = 7, d_feat: int = 1433):
+    """Synthetic stand-in for the Cora citation graph (paper §7.6): a random
+    partition model with intra-class preference plus one-hot-ish features."""
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    labels = jax.random.randint(k1, (n_vertices,), 0, n_classes)
+    src = jax.random.randint(k2, (n_edges,), 0, n_vertices)
+    # 80% intra-class edges: pick dst from the same label bucket by rejection
+    dst_rand = jax.random.randint(k3, (n_edges,), 0, n_vertices)
+    same = jax.random.uniform(k4, (n_edges,)) < 0.8
+    # crude intra-class pairing: shift within sorted-by-label ordering
+    order = jnp.argsort(labels)
+    rank = jnp.argsort(order)
+    dst_same = order[(rank[src] + 1) % n_vertices]
+    dst = jnp.where(same, dst_same, dst_rand)
+    feats = jax.random.bernoulli(k2, 0.01, (n_vertices, d_feat)).astype(jnp.float32)
+    return (src.astype(U32), dst.astype(U32)), labels, feats
+
+
+def edge_batches(key, n_batches: int, batch_size: int, log2_n: int,
+                 a=0.5, b=0.1, c=0.1, d=0.3):
+    """Stream of edge-update batches (paper §7.2 setup)."""
+    keys = jax.random.split(key, n_batches)
+    return [rmat_edges(k, batch_size, log2_n, a, b, c, d) for k in keys]
+
+
+def token_stream(key, batch: int, seq_len: int, vocab: int):
+    """Synthetic LM token batch."""
+    return jax.random.randint(key, (batch, seq_len), 0, vocab, dtype=jnp.int32)
+
+
+def host_rmat(seed: int, n_edges: int, log2_n: int, a=0.5, b=0.1, c=0.1, d=0.3):
+    """NumPy R-MAT (for host-side dataset prep without device transfer)."""
+    rng = np.random.default_rng(seed)
+    src = np.zeros(n_edges, np.uint32)
+    dst = np.zeros(n_edges, np.uint32)
+    for _ in range(log2_n):
+        q = rng.choice(4, size=n_edges, p=[a, b, c, d])
+        src = (src << 1) | (q >= 2)
+        dst = (dst << 1) | (q % 2)
+    return src, dst

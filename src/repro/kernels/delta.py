@@ -1,0 +1,151 @@
+"""Pallas TPU kernel: frame-of-reference delta decode of compressed chunks.
+
+The paper's §4.4 difference encoding uses variable-byte codes — byte-serial
+decode is VPU-hostile, so the TPU adaptation packs per-chunk deltas at a
+quantized bit width w ∈ {8, 16, 32, 64}:
+
+  chunk (128 sorted codes as (hi, lo) u32)
+    -> anchor (code[0]) + 127 deltas packed into 128*w/32 u32 words
+  w = 64 is the raw fallback for chunks that cross an owner boundary
+  (non-monotone) or have >32-bit deltas.
+
+Decode kernel (the search hot path): branch-free unpack of all width classes
++ select, then a carry-correct 64-bit prefix sum built from two 16-bit-limb
+u32 cumsums. Encode is pure jnp (ops.py) — also 32-bit-native, so both
+directions run on TPU. Compression ratio matches the paper's DE study
+(benchmarks/bench_memory.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.kernels.szudzik import _add64, _sub64
+
+U32 = jnp.uint32
+
+CHUNK = 128           # paper's b, aligned to the VPU lane count
+WORDS = 2 * CHUNK     # packed buffer words per chunk (w=64 raw worst case)
+ROWS = 8              # chunks per block
+
+
+def _unpack_all_widths(packed, lane):
+    """packed: [R, WORDS]; lane: [R, CHUNK] iota. Returns w8/w16/w32 unpacks
+    ([R, CHUNK] u32 deltas) and the raw (hi, lo) interpretation."""
+    w8_words = jnp.repeat(packed[:, :CHUNK // 4], 4, axis=1)
+    v8 = (w8_words >> ((lane % 4) * 8)) & np.uint32(0xFF)
+    w16_words = jnp.repeat(packed[:, :CHUNK // 2], 2, axis=1)
+    v16 = (w16_words >> ((lane % 2) * 16)) & np.uint32(0xFFFF)
+    v32 = packed[:, :CHUNK]
+    raw_hi = packed[:, :CHUNK]
+    raw_lo = packed[:, CHUNK:]
+    return v8, v16, v32, raw_hi, raw_lo
+
+
+def _cumsum64_u32(d):
+    """Exact 64-bit prefix sum of u32 deltas via 16-bit limb cumsums.
+
+    cumsum of 128 values each < 2^16 stays < 2^23 — no u32 overflow — so the
+    two limb cumsums are exact; recomposition handles the carry."""
+    lo16 = jnp.cumsum(d & np.uint32(0xFFFF), axis=1, dtype=U32)
+    hi16 = jnp.cumsum(d >> 16, axis=1, dtype=U32)
+    lo = lo16 + (hi16 << 16)
+    carry = (lo < lo16).astype(U32)
+    hi = (hi16 >> 16) + carry
+    return hi, lo
+
+
+def _decode_kernel(packed_ref, width_ref, a_hi_ref, a_lo_ref,
+                   out_hi_ref, out_lo_ref):
+    packed = packed_ref[...]
+    width = width_ref[...]          # [R, 1] u32
+    lane = jax.lax.broadcasted_iota(U32, (packed.shape[0], CHUNK), 1)
+    v8, v16, v32, raw_hi, raw_lo = _unpack_all_widths(packed, lane)
+    d = jnp.where(width == 8, v8, jnp.where(width == 16, v16, v32))
+    c_hi, c_lo = _cumsum64_u32(d)
+    hi, lo = _add64(jnp.broadcast_to(a_hi_ref[...], c_hi.shape),
+                    jnp.broadcast_to(a_lo_ref[...], c_lo.shape), c_hi, c_lo)
+    is_raw = width == 64
+    out_hi_ref[...] = jnp.where(is_raw, raw_hi, hi)
+    out_lo_ref[...] = jnp.where(is_raw, raw_lo, lo)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def decode_chunks(packed, widths, anchors_hi, anchors_lo,
+                  interpret: bool = False):
+    """packed u32 [C, WORDS]; widths u32 [C]; anchors (hi, lo) u32 [C]
+    -> (code_hi, code_lo) u32 [C, CHUNK]."""
+    c = packed.shape[0]
+    grid = (c // ROWS,)
+    return pl.pallas_call(
+        _decode_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((ROWS, WORDS), lambda i: (i, 0)),
+            pl.BlockSpec((ROWS, 1), lambda i: (i, 0)),
+            pl.BlockSpec((ROWS, 1), lambda i: (i, 0)),
+            pl.BlockSpec((ROWS, 1), lambda i: (i, 0)),
+        ],
+        out_specs=[pl.BlockSpec((ROWS, CHUNK), lambda i: (i, 0))] * 2,
+        out_shape=[jax.ShapeDtypeStruct((c, CHUNK), U32)] * 2,
+        interpret=interpret,
+    )(packed, widths.reshape(-1, 1), anchors_hi.reshape(-1, 1),
+      anchors_lo.reshape(-1, 1))
+
+
+# --------------------------------------------------------------- encode (jnp)
+
+
+def encode_chunks(code_hi, code_lo):
+    """FOR-pack sorted (hi, lo) u32 [C, CHUNK] chunks.
+
+    Returns (packed u32 [C, WORDS], widths u32 [C], anchors (hi, lo) u32 [C]).
+    Pure jnp on u32 — runs on TPU via XLA (no 64-bit types needed)."""
+    c = code_hi.shape[0]
+    d_hi, d_lo = _sub64(code_hi[:, 1:], code_lo[:, 1:],
+                        code_hi[:, :-1], code_lo[:, :-1])
+    zero = jnp.zeros((c, 1), U32)
+    d_hi = jnp.concatenate([zero, d_hi], axis=1)
+    d_lo = jnp.concatenate([zero, d_lo], axis=1)
+    # monotone chunk <=> every 64-bit delta non-negative <=> no borrow wrapped:
+    # detect via (delta <= original) is unreliable; use direct compare instead
+    ge = (code_hi[:, 1:] > code_hi[:, :-1]) | (
+        (code_hi[:, 1:] == code_hi[:, :-1]) &
+        (code_lo[:, 1:] >= code_lo[:, :-1]))
+    mono = jnp.all(ge, axis=1)
+    small = mono & jnp.all(d_hi == 0, axis=1)
+    dmax = jnp.max(d_lo, axis=1)
+    width = jnp.where(~small, 64,
+                      jnp.where(dmax < 256, 8,
+                                jnp.where(dmax < 65536, 16, 32))).astype(U32)
+
+    # pack each width class (vectorized over all chunks; select at the end)
+    shifts4 = (np.arange(4, dtype=np.uint32) * 8)
+    p8 = (d_lo.reshape(c, CHUNK // 4, 4) << shifts4).sum(-1, dtype=U32)
+    shifts2 = (np.arange(2, dtype=np.uint32) * 16)
+    p16 = (d_lo.reshape(c, CHUNK // 2, 2) << shifts2).sum(-1, dtype=U32)
+
+    def pad(x):
+        return jnp.concatenate(
+            [x, jnp.zeros((c, WORDS - x.shape[1]), U32)], axis=1)
+
+    packed8 = pad(p8)
+    packed16 = pad(p16)
+    packed32 = pad(d_lo)
+    packed64 = jnp.concatenate([code_hi, code_lo], axis=1)
+    w = width[:, None]
+    packed = jnp.where(w == 8, packed8,
+                       jnp.where(w == 16, packed16,
+                                 jnp.where(w == 32, packed32, packed64)))
+    return packed, width, code_hi[:, 0], code_lo[:, 0]
+
+
+def packed_nbytes(widths) -> int:
+    """Actual compressed footprint (words used, not buffer capacity)."""
+    widths = np.asarray(widths)
+    words = np.where(widths == 64, 2 * CHUNK, CHUNK * widths // 32)
+    return int(words.sum() * 4 + widths.size * (1 + 8))  # + width + anchor

@@ -1,0 +1,92 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Handle padding/reshaping to lane tiles and auto-select interpret mode off-TPU
+(kernels are TPU-target; interpret=True executes the kernel body in Python
+for CPU validation, per the project brief).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import delta as _delta
+from repro.kernels import range_search as _rs
+from repro.kernels import sgns as _sgns
+from repro.kernels import szudzik as _szudzik
+
+U32 = jnp.uint32
+LANES = _szudzik.LANES
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _to_tiles(x):
+    n = x.shape[0]
+    pad = (-n) % (LANES * _szudzik.BLOCK_ROWS)
+    xp = jnp.concatenate([x, jnp.zeros((pad,), x.dtype)]) if pad else x
+    return xp.reshape(-1, LANES), n
+
+
+def szudzik_pair(x, y, interpret: bool | None = None):
+    """u32 [N] operands -> (hi, lo) u32 [N] codes (Pallas)."""
+    interpret = _interpret_default() if interpret is None else interpret
+    xt, n = _to_tiles(jnp.asarray(x, U32))
+    yt, _ = _to_tiles(jnp.asarray(y, U32))
+    hi, lo = _szudzik.pair_tiles(xt, yt, interpret=interpret)
+    return hi.reshape(-1)[:n], lo.reshape(-1)[:n]
+
+
+def szudzik_unpair(z_hi, z_lo, interpret: bool | None = None):
+    """(hi, lo) u32 [N] codes -> (x, y) u32 [N] operands (Pallas)."""
+    interpret = _interpret_default() if interpret is None else interpret
+    ht, n = _to_tiles(jnp.asarray(z_hi, U32))
+    lt, _ = _to_tiles(jnp.asarray(z_lo, U32))
+    x, y = _szudzik.unpair_tiles(ht, lt, interpret=interpret)
+    return x.reshape(-1)[:n], y.reshape(-1)[:n]
+
+
+def delta_pack(code_hi, code_lo):
+    """Sorted (hi, lo) u32 [C, 128] -> (packed, widths, anchor_hi, anchor_lo)."""
+    return _delta.encode_chunks(code_hi, code_lo)
+
+
+def delta_unpack(packed, widths, anchors_hi, anchors_lo,
+                 interpret: bool | None = None):
+    interpret = _interpret_default() if interpret is None else interpret
+    c = packed.shape[0]
+    pad = (-c) % _delta.ROWS
+    if pad:
+        packed = jnp.concatenate(
+            [packed, jnp.zeros((pad, packed.shape[1]), U32)])
+        widths = jnp.concatenate([widths, jnp.full((pad,), 32, U32)])
+        anchors_hi = jnp.concatenate([anchors_hi, jnp.zeros((pad,), U32)])
+        anchors_lo = jnp.concatenate([anchors_lo, jnp.zeros((pad,), U32)])
+    hi, lo = _delta.decode_chunks(packed, widths, anchors_hi, anchors_lo,
+                                  interpret=interpret)
+    return hi[:c], lo[:c]
+
+
+def find_next_packed(packed, widths, anchors_hi, anchors_lo, chunk_idx,
+                     f_targets, interpret: bool | None = None):
+    interpret = _interpret_default() if interpret is None else interpret
+    return _rs.find_next_packed(packed, widths, anchors_hi, anchors_lo,
+                                chunk_idx, f_targets, interpret=interpret)
+
+
+candidate_chunks = _rs.candidate_chunks
+
+
+def sgns_step(u, v_pos, v_neg, interpret: bool | None = None):
+    interpret = _interpret_default() if interpret is None else interpret
+    b, d = u.shape
+    padb = (-b) % _sgns.ROWS
+    padd = (-d) % LANES
+    if padb or padd:
+        u = jnp.pad(u, ((0, padb), (0, padd)))
+        v_pos = jnp.pad(v_pos, ((0, padb), (0, padd)))
+        v_neg = jnp.pad(v_neg, ((0, padb), (0, 0), (0, padd)))
+    loss, du, dvp, dvn = _sgns.sgns_fused(u, v_pos, v_neg,
+                                          interpret=interpret)
+    return (loss[:b], du[:b, :d], dvp[:b, :d], dvn[:b, :, :d])

@@ -1,0 +1,75 @@
+"""Pure-jnp uint64 oracles for every kernel (requires x64; repro.core enables
+it). Each kernel test sweeps shapes/dtypes and asserts exact equality against
+these references."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import pairing
+
+
+# ------------------------------------------------------------------ szudzik
+
+
+def szudzik_pair_ref(x, y):
+    """u32 arrays -> (hi, lo) u32 via real uint64 arithmetic."""
+    z = pairing.szudzik_pair(jnp.asarray(x, jnp.uint64),
+                             jnp.asarray(y, jnp.uint64))
+    return pairing.split_u64(z)
+
+
+def szudzik_unpair_ref(z_hi, z_lo):
+    z = pairing.join_u64(z_hi, z_lo)
+    x, y = pairing.szudzik_unpair(z)
+    return x.astype(jnp.uint32), y.astype(jnp.uint32)
+
+
+# ------------------------------------------------------------- delta codec
+
+
+def delta_encode_ref(codes_u64, width_bits: int):
+    """codes: sorted uint64 [C, B]; returns (anchor u64[C], deltas u64[C, B])
+    with deltas[:, 0] = 0. Oracle for pack/unpack roundtrips."""
+    codes = jnp.asarray(codes_u64, jnp.uint64)
+    anchors = codes[:, 0]
+    deltas = jnp.concatenate(
+        [jnp.zeros_like(codes[:, :1]), codes[:, 1:] - codes[:, :-1]], axis=1)
+    return anchors, deltas
+
+
+def delta_decode_ref(anchors, deltas):
+    return anchors[:, None] + jnp.cumsum(deltas, axis=1, dtype=jnp.uint64)
+
+
+# ------------------------------------------------------------ range search
+
+
+def find_in_chunks_ref(codes_u64, f_targets, length):
+    """codes: uint64 [Q, B] candidate chunk per query; f_targets: uint64 [Q].
+    Returns (v_next u32 [Q], found bool [Q]) — the FINDNEXT decode+match."""
+    f, v = pairing.szudzik_unpair(jnp.asarray(codes_u64, jnp.uint64))
+    hit = f == jnp.asarray(f_targets, jnp.uint64)[:, None]
+    found = hit.any(axis=1)
+    idx = jnp.argmax(hit, axis=1)
+    vout = jnp.take_along_axis(v, idx[:, None], axis=1)[:, 0]
+    return jnp.where(found, vout, 0).astype(jnp.uint32), found
+
+
+# -------------------------------------------------------------------- sgns
+
+
+def sgns_ref(u, v_pos, v_neg):
+    """u, v_pos: f32 [B, D]; v_neg: f32 [B, K, D].
+    Returns (loss scalar, du, dvp, dvn) — the fused SGNS step oracle."""
+    import jax
+
+    def loss_fn(u, v_pos, v_neg):
+        pos = jnp.sum(u * v_pos, axis=-1)
+        neg = jnp.einsum("bd,bkd->bk", u, v_neg)
+        return -(jax.nn.log_sigmoid(pos).sum()
+                 + jax.nn.log_sigmoid(-neg).sum())
+
+    loss, grads = jax.value_and_grad(loss_fn, argnums=(0, 1, 2))(u, v_pos,
+                                                                 v_neg)
+    return loss, *grads

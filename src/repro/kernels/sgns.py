@@ -1,0 +1,78 @@
+"""Pallas TPU kernel: fused skip-gram negative-sampling step.
+
+The downstream hot loop of the paper's embedding application (§7.6): per
+batch row, u·v+ and u·V- logits, logsigmoid losses, and ALL input gradients
+in one VMEM-resident pass — logits/probs never round-trip to HBM (flash-
+attention-style fusion; XLA handles the surrounding gather/scatter of
+embedding rows, which it already fuses well).
+
+  u      [B, D]     center rows     (gathered)
+  v_pos  [B, D]     context rows
+  v_neg  [B, K, D]  negative rows
+  ->
+  loss   [B]        per-row loss
+  du     [B, D]     dL/du
+  dvp    [B, D]     dL/dv_pos
+  dvn    [B, K, D]  dL/dv_neg
+
+Blocks: rows tiled by 8 (f32 sublane), D padded to 128 lanes; the [B,K]
+negative logits are a batched [8, D] x [D, K] MXU matmul per tile.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+F32 = jnp.float32
+ROWS = 8
+
+
+def _sigmoid(x):
+    return jax.nn.sigmoid(x)
+
+
+def _sgns_kernel(u_ref, vp_ref, vn_ref, loss_ref, du_ref, dvp_ref, dvn_ref):
+    u = u_ref[...]            # [R, D]
+    vp = vp_ref[...]          # [R, D]
+    vn = vn_ref[...]          # [R, K, D]
+    pos = jnp.sum(u * vp, axis=-1)                        # [R]
+    neg = jnp.einsum("rd,rkd->rk", u, vn,
+                     preferred_element_type=F32)          # [R, K] (MXU)
+    # loss = -log σ(pos) - Σ log σ(-neg)
+    loss_ref[...] = (jnp.logaddexp(0.0, -pos)
+                     + jnp.logaddexp(0.0, neg).sum(-1))[:, None]
+    gpos = -_sigmoid(-pos)                                # dL/dpos
+    gneg = _sigmoid(neg)                                  # dL/dneg  [R, K]
+    du_ref[...] = gpos[:, None] * vp + jnp.einsum(
+        "rk,rkd->rd", gneg, vn, preferred_element_type=F32)
+    dvp_ref[...] = gpos[:, None] * u
+    dvn_ref[...] = gneg[..., None] * u[:, None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def sgns_fused(u, v_pos, v_neg, interpret: bool = False):
+    """u, v_pos: f32 [B, D]; v_neg: f32 [B, K, D] (B % 8 == 0, D % 128 == 0).
+    Returns (loss [B], du, dvp, dvn)."""
+    b, d = u.shape
+    k = v_neg.shape[1]
+    grid = (b // ROWS,)
+    row2 = pl.BlockSpec((ROWS, d), lambda i: (i, 0))
+    row3 = pl.BlockSpec((ROWS, k, d), lambda i: (i, 0, 0))
+    scal = pl.BlockSpec((ROWS, 1), lambda i: (i, 0))
+    loss, du, dvp, dvn = pl.pallas_call(
+        _sgns_kernel,
+        grid=grid,
+        in_specs=[row2, row2, row3],
+        out_specs=[scal, row2, row2, row3],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, 1), F32),
+            jax.ShapeDtypeStruct((b, d), F32),
+            jax.ShapeDtypeStruct((b, d), F32),
+            jax.ShapeDtypeStruct((b, k, d), F32),
+        ],
+        interpret=interpret,
+    )(u, v_pos, v_neg)
+    return loss[:, 0], du, dvp, dvn

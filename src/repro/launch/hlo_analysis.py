@@ -1,0 +1,377 @@
+"""Trip-count-aware HLO cost walker.
+
+XLA's `compiled.cost_analysis()` counts while-loop bodies ONCE (verified in
+tests/test_dryrun.py), which under-reports scanned-layer / microbatched models
+by orders of magnitude. This walker parses the compiled per-partition HLO:
+
+  * dot FLOPs        = 2 x prod(output dims) x prod(lhs contracting dims),
+                       scaled by enclosing while trip counts
+                       (`backend_config known_trip_count`)
+  * HBM bytes        = sum over top-level ops of operand+output bytes
+                       (fusion internals excluded — the fusion call site's
+                       operands/outputs are the HBM traffic), x trip counts;
+                       sorts counted as log2(n) passes (multi-pass bandwidth)
+  * collective bytes = per collective op, output shard bytes x trip counts,
+                       split by kind
+
+All numbers are per-chip (the SPMD module is per-partition). Tuple shapes with
+`/*index=N*/` comments and nested parens are handled structurally (regexes on
+whole lines break on them).
+"""
+from __future__ import annotations
+
+import math
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "token": 0, "opaque": 0,
+}
+
+COLLECTIVE_KINDS = ("all-gather", "all-reduce", "reduce-scatter",
+                    "all-to-all", "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COMP_HDR_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_LHS_CDIMS_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_NAME_RE = re.compile(r"%([\w.\-]+)")
+
+
+def _first_shape(s: str) -> Tuple[Optional[str], List[int]]:
+    m = _SHAPE_RE.search(s)
+    if not m:
+        return None, []
+    dt, dims = m.groups()
+    return dt, [int(d) for d in dims.split(",") if d]
+
+
+def _shape_bytes(s: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(s):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _balanced(s: str, start: int) -> int:
+    """Index of the char closing the paren opened at s[start]."""
+    depth = 0
+    for i in range(start, len(s)):
+        if s[i] == "(":
+            depth += 1
+        elif s[i] == ")":
+            depth -= 1
+            if depth == 0:
+                return i
+    return len(s) - 1
+
+
+@dataclass
+class Op:
+    name: str
+    opcode: str
+    out_shape: str
+    operands: List[str]
+    attrs: str
+    operands_str: str = ""
+
+
+def _parse_op_line(line: str) -> Optional[Op]:
+    s = line.strip()
+    if s.startswith("ROOT "):
+        s = s[5:]
+    if not s.startswith("%"):
+        return None
+    eq = s.find(" = ")
+    if eq < 0:
+        return None
+    name = s[1:eq].strip()
+    rest = s[eq + 3:]
+    if rest.startswith("("):  # tuple shape
+        close = _balanced(rest, 0)
+        shape = rest[:close + 1]
+        rest2 = rest[close + 1:].lstrip()
+    else:
+        sp = rest.find(" ")
+        if sp < 0:
+            return None
+        shape = rest[:sp]
+        rest2 = rest[sp + 1:].lstrip()
+    par = rest2.find("(")
+    if par < 0:
+        return None
+    opcode = rest2[:par].strip()
+    close = _balanced(rest2, par)
+    operands_str = rest2[par + 1:close]
+    attrs = rest2[close + 1:]
+    operands = _NAME_RE.findall(operands_str)
+    return Op(name=name, opcode=opcode, out_shape=shape, operands=operands,
+              attrs=attrs, operands_str=operands_str)
+
+
+@dataclass
+class Computation:
+    name: str
+    ops: List[Op] = field(default_factory=list)
+    shapes: Dict[str, str] = field(default_factory=dict)
+
+
+_SKIP_BYTES_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "while", "conditional", "call", "iota",
+    "get-dimension-size", "partition-id", "replica-id",
+}
+
+
+def parse_module(text: str) -> Tuple[Dict[str, Computation], Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    entry = None
+    cur: Optional[Computation] = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if cur is None or line.endswith("{"):
+            hdr = _COMP_HDR_RE.match(line)
+            if hdr and line.endswith("{") and " = " not in line.split("(")[0]:
+                cur = Computation(name=hdr.group(2))
+                comps[cur.name] = cur
+                if hdr.group(1):
+                    entry = cur.name
+                continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        op = _parse_op_line(line)
+        if op is None:
+            continue
+        cur.ops.append(op)
+        cur.shapes[op.name] = op.out_shape
+    return comps, entry
+
+
+def _dot_flops(op: Op, comp: Computation) -> float:
+    _, out_dims = _first_shape(op.out_shape)
+    out_elems = math.prod(out_dims) if out_dims else 1
+    contract = 1
+    cd = _LHS_CDIMS_RE.search(op.attrs)
+    if cd and op.operands:
+        lhs_shape = comp.shapes.get(op.operands[0])
+        if lhs_shape:
+            _, lhs_dims = _first_shape(lhs_shape)
+            for d in cd.group(1).split(","):
+                if d and int(d) < len(lhs_dims):
+                    contract *= lhs_dims[int(d)]
+    return 2.0 * out_elems * contract
+
+
+def _sliced_params(comp: Computation) -> Dict[int, int]:
+    """Parameter indices consumed (only) by an in-fusion dynamic-slice ->
+    slice bytes: the fusion touches a window of that operand, not the whole
+    buffer (scan-saved activation stacks read per-layer slices this way)."""
+    param_of: Dict[str, int] = {}
+    for op in comp.ops:
+        if op.opcode == "parameter":
+            m = re.match(r"\s*(\d+)", op.operands_str)
+            if m:
+                param_of[op.name] = int(m.group(1))
+    sliced: Dict[int, int] = {}
+    full_use: set = set()
+    for op in comp.ops:
+        if op.opcode == "parameter":
+            continue
+        for pos, nm in enumerate(op.operands):
+            if nm not in param_of:
+                continue
+            idx = param_of[nm]
+            if op.opcode == "dynamic-slice" and pos == 0:
+                sliced[idx] = min(sliced.get(idx, 1 << 62),
+                                  _shape_bytes(op.out_shape))
+            else:
+                full_use.add(idx)
+    return {k: v for k, v in sliced.items() if k not in full_use}
+
+
+def _op_mem_bytes(op: Op, comp: Computation, comps=None) -> float:
+    if op.opcode in _SKIP_BYTES_OPS:
+        return 0.0
+    out_b = _shape_bytes(op.out_shape)
+    # In-place / windowed ops: XLA aliases the big operand, real HBM traffic
+    # is the touched window, not the whole buffer.
+    if op.opcode == "dynamic-update-slice":
+        upd = (_shape_bytes(comp.shapes[op.operands[1]])
+               if len(op.operands) > 1 and op.operands[1] in comp.shapes
+               else 0)
+        return float(2 * upd)
+    if op.opcode == "dynamic-slice":
+        return float(2 * out_b)
+    if op.opcode == "scatter":
+        upd = sum(_shape_bytes(comp.shapes[nm]) for nm in op.operands[1:]
+                  if nm in comp.shapes)
+        return float(2 * upd)
+    if op.opcode == "gather":
+        idx = (_shape_bytes(comp.shapes[op.operands[1]])
+               if len(op.operands) > 1 and op.operands[1] in comp.shapes
+               else 0)
+        return float(2 * out_b + idx)
+    in_list = [_shape_bytes(comp.shapes.get(nm, "")) for nm in op.operands]
+    if op.opcode == "fusion" and comps is not None:
+        callee = _CALLS_RE.search(op.attrs)
+        if callee and callee.group(1) in comps:
+            sliced = _sliced_params(comps[callee.group(1)])
+            for idx, sl_bytes in sliced.items():
+                if idx < len(in_list):
+                    in_list[idx] = min(in_list[idx], sl_bytes)
+    in_b = sum(in_list)
+    if op.opcode == "fusion" and "dynamic-update-slice" in op.name:
+        # fused in-place update: the big buffer is aliased input+output;
+        # traffic is everything except that buffer, twice (read slice + write)
+        big = max(in_list) if in_list else 0
+        return float(2 * max(in_b - big, 0))
+    if op.opcode == "fusion" and op.name.startswith("dynamic-slice"):
+        return float(2 * out_b)
+    total = out_b + in_b
+    if op.opcode == "sort":
+        _, dims = _first_shape(op.out_shape)
+        n = max(dims) if dims else 2
+        total *= max(1.0, math.log2(max(n, 2)))
+    return float(total)
+
+
+@dataclass
+class Totals:
+    flops: float = 0.0
+    mem_bytes: float = 0.0
+    coll_bytes: Dict[str, float] = field(
+        default_factory=lambda: {k: 0.0 for k in COLLECTIVE_KINDS})
+    coll_counts: Dict[str, float] = field(
+        default_factory=lambda: {k: 0.0 for k in COLLECTIVE_KINDS})
+
+    def add(self, other: "Totals", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.mem_bytes += other.mem_bytes * mult
+        for k in COLLECTIVE_KINDS:
+            self.coll_bytes[k] += other.coll_bytes[k] * mult
+            self.coll_counts[k] += other.coll_counts[k] * mult
+
+    @property
+    def coll_total(self) -> float:
+        return sum(self.coll_bytes.values())
+
+
+def _comp_totals(comp: Computation, comps=None):
+    t = Totals()
+    edges: List[Tuple[str, str, float]] = []
+    for op in comp.ops:
+        if op.opcode in ("dot", "convolution"):
+            t.flops += _dot_flops(op, comp)
+        base = op.opcode[:-6] if op.opcode.endswith("-start") else op.opcode
+        if base in COLLECTIVE_KINDS:
+            if op.opcode.endswith("-done"):
+                continue
+            t.coll_bytes[base] += _shape_bytes(op.out_shape)
+            t.coll_counts[base] += 1
+            continue
+        t.mem_bytes += _op_mem_bytes(op, comp, comps)
+        if op.opcode == "fusion":
+            # fusion internals stay on-chip (bytes counted at the call site),
+            # but dots inside fusions still burn MXU flops
+            for callee in _CALLS_RE.findall(op.attrs):
+                edges.append(("fusion", callee, 1.0))
+        elif op.opcode == "while":
+            trip = 1.0
+            tm = _TRIP_RE.search(op.attrs)
+            if tm:
+                trip = float(tm.group(1))
+            bm = _BODY_RE.search(op.attrs)
+            cm = _COND_RE.search(op.attrs)
+            if bm:
+                edges.append(("while", bm.group(1), trip))
+            if cm:
+                edges.append(("while", cm.group(1), trip))
+        elif op.opcode in ("call", "custom-call", "conditional",
+                           "async-start"):
+            for callee in _CALLS_RE.findall(op.attrs):
+                edges.append(("call", callee, 1.0))
+            for callee in re.findall(
+                    r"(?:true_computation|false_computation|"
+                    r"branch_computations)=\{?%?([\w.\-]+)", op.attrs):
+                edges.append(("call", callee, 1.0))
+    return t, edges
+
+
+def breakdown(text: str, top: int = 25):
+    """Per-opcode (and per-large-op) bytes/flops with trip multipliers —
+    the 'profile' used by the §Perf hypothesis loop (no real-TPU timings;
+    the lowered IR is the evidence, per the project brief)."""
+    comps, entry = parse_module(text)
+    if entry is None:
+        return []
+    # compute the trip multiplier of every computation reachable from entry
+    mult: Dict[str, float] = {entry: 1.0}
+    stack = [entry]
+    while stack:
+        name = stack.pop()
+        if name not in comps:
+            continue
+        _, edges = _comp_totals(comps[name], comps)
+        for kind, callee, m in edges:
+            if kind == "fusion":
+                continue
+            new = mult[name] * m
+            if mult.get(callee, 0.0) < new:
+                mult[callee] = new
+                stack.append(callee)
+    rows = []
+    for cname, m in mult.items():
+        comp = comps.get(cname)
+        if comp is None:
+            continue
+        for op in comp.ops:
+            b = _op_mem_bytes(op, comp, comps) * m
+            fl = (_dot_flops(op, comp) * m
+                  if op.opcode in ("dot", "convolution") else 0.0)
+            if b > 0 or fl > 0:
+                rows.append((b, fl, op.opcode, op.name, op.out_shape[:60],
+                             m))
+    rows.sort(reverse=True)
+    return rows[:top]
+
+
+def analyze(text: str) -> Totals:
+    comps, entry = parse_module(text)
+    if entry is None:
+        return Totals()
+    memo: Dict[str, Totals] = {}
+
+    def total_of(name: str, depth=0) -> Totals:
+        if name in memo:
+            return memo[name]
+        if name not in comps or depth > 60:
+            return Totals()
+        own, edges = _comp_totals(comps[name], comps)
+        agg = Totals()
+        agg.add(own)
+        for kind, callee, mult in edges:
+            sub = total_of(callee, depth + 1)
+            if kind == "fusion":  # flops only; bytes live at the call site
+                agg.flops += sub.flops * mult
+            else:
+                agg.add(sub, mult)
+        memo[name] = agg
+        return agg
+
+    return total_of(entry)

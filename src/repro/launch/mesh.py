@@ -1,0 +1,34 @@
+"""Production meshes (importing this module never touches jax device state).
+
+Single pod:  (data=16, model=16)          = 256 chips (one v5e pod)
+Multi-pod:   (pod=2, data=16, model=16)   = 512 chips
+
+Axis roles (DESIGN.md §4):
+  pod    pure DP across pods (gradient all-reduce over DCN/ICI)
+  data   FSDP / batch within a pod; also the walk-shard axis for Wharf
+  model  TP / EP / embedding-row / vertex-shard axis
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def batch_axes(mesh) -> tuple:
+    """Axes over which the global batch is sharded."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def mesh_size(mesh) -> int:
+    return mesh.devices.size
+
+
+# TPU v5e roofline constants (per chip) — §Roofline of EXPERIMENTS.md.
+PEAK_FLOPS_BF16 = 197e12      # FLOP/s
+HBM_BW = 819e9                # bytes/s
+ICI_BW = 50e9                 # bytes/s/link

@@ -1,0 +1,48 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+
+"""Per-cell profile: lower+compile a cell and print the top-N ops by
+trip-scaled HBM bytes (the dry-run 'profile' for §Perf iterations).
+
+  PYTHONPATH=src python -m repro.launch.profile_cell --arch qwen1.5-110b \
+      --shape train_4k
+"""
+import argparse  # noqa: E402
+import logging  # noqa: E402
+
+import jax  # noqa: E402
+
+from repro.launch.hlo_analysis import analyze, breakdown  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi", action="store_true")
+    ap.add_argument("--top", type=int, default=25)
+    args = ap.parse_args()
+    logging.disable(logging.WARNING)
+
+    from repro.launch.steps import build_cell
+
+    mesh = make_production_mesh(multi_pod=args.multi)
+    with jax.set_mesh(mesh):
+        plan = build_cell(args.arch, args.shape, mesh)
+        compiled = jax.jit(
+            plan.fn, in_shardings=plan.in_shardings,
+            out_shardings=plan.out_shardings,
+            donate_argnums=plan.donate_argnums).lower(*plan.args).compile()
+    txt = compiled.as_text()
+    tot = analyze(txt)
+    print(f"totals: flops={tot.flops:.4g} mem={tot.mem_bytes:.4g}B "
+          f"coll={tot.coll_total:.4g}B")
+    print(f"{'bytes':>12s} {'flops':>12s} {'mult':>8s} opcode  name  shape")
+    for b, fl, opc, name, shape, m in breakdown(txt, args.top):
+        print(f"{b:12.4g} {fl:12.4g} {m:8.0f} {opc:18s} {name[:42]:42s} {shape}")
+
+
+if __name__ == "__main__":
+    main()

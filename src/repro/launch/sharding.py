@@ -1,0 +1,114 @@
+"""Sharding rules per model family (DESIGN.md §4).
+
+Conventions: `fsdp` = 'data' (param + optimizer-state sharding, ZeRO-style),
+`tp` = 'model' (tensor/expert/vocab/row parallel), batch over ('pod','data')
+on the multi-pod mesh. All rules return PartitionSpec pytrees matching the
+param pytree; the launch layer wraps them in NamedShardings.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+FSDP = "data"
+TP = "model"
+
+
+def named(mesh, pspec_tree):
+    return jax.tree.map(
+        lambda ps: NamedSharding(mesh, ps), pspec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def replicated(mesh, tree):
+    return jax.tree.map(lambda _: NamedSharding(mesh, P()), tree)
+
+
+# ------------------------------------------------------------------ LM rules
+
+
+def lm_param_pspecs(cfg, tp_size: int = 16) -> Dict[str, Any]:
+    """FSDP x TP rules. MoE: expert-parallel when n_experts % tp == 0, else
+    tensor-parallel inside each expert (qwen2-moe's 60 experts vs tp=16)."""
+    layer: Dict[str, Any] = {
+        "wq": P(None, FSDP, TP),
+        "wk": P(None, FSDP, TP),
+        "wv": P(None, FSDP, TP),
+        "wo": P(None, TP, FSDP),
+        "ln1": P(None, None),
+        "ln2": P(None, None),
+    }
+    if cfg.qkv_bias:
+        layer.update({"bq": P(None, TP), "bk": P(None, TP), "bv": P(None, TP)})
+    if cfg.moe:
+        ep = cfg.moe.e_padded % tp_size == 0
+        if ep:
+            layer.update({
+                "router": P(None, FSDP, None),
+                "we_gate": P(None, TP, FSDP, None),
+                "we_up": P(None, TP, FSDP, None),
+                "we_down": P(None, TP, None, FSDP),
+            })
+        else:
+            layer.update({
+                "router": P(None, FSDP, None),
+                "we_gate": P(None, None, FSDP, TP),
+                "we_up": P(None, None, FSDP, TP),
+                "we_down": P(None, None, TP, FSDP),
+            })
+        if cfg.moe.n_shared:
+            layer.update({
+                "ws_gate": P(None, FSDP, TP),
+                "ws_up": P(None, FSDP, TP),
+                "ws_down": P(None, TP, FSDP),
+            })
+    else:
+        layer.update({
+            "w_gate": P(None, FSDP, TP),
+            "w_up": P(None, FSDP, TP),
+            "w_down": P(None, TP, FSDP),
+        })
+    out = {"embed": P(TP, FSDP), "final_ln": P(None), "layers": layer}
+    if not cfg.tie_embeddings:
+        out["unembed"] = P(FSDP, TP)
+    return out
+
+
+def lm_cache_pspec(cfg, shape_info, mesh) -> P:
+    """KV cache [L, B, T, NKV, D] rules per decode shape."""
+    b = shape_info["global_batch"]
+    batch = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    if b == 1:
+        # long-context single stream: shard the cache length everywhere useful
+        seq_axes = tuple(a for a in ("pod", "data", "model")
+                         if a in mesh.axis_names)
+        return P(None, None, seq_axes, None, None)
+    if cfg.n_kv_heads % 16 == 0:
+        return P(None, batch, None, TP, None)
+    return P(None, batch, TP, None, None)  # shard cache length over model
+
+
+def opt_pspecs(param_pspecs):
+    """Adam m/v shard exactly like their params; step is replicated."""
+    return {
+        "step": P(),
+        "m": param_pspecs,
+        "v": param_pspecs,
+    }
+
+
+# ------------------------------------------------------------------ GNN/recsys
+
+
+def gnn_param_pspecs(params_shape) -> Any:
+    """GNN params are small: replicate (activations carry the scale)."""
+    return jax.tree.map(lambda _: P(), params_shape)
+
+
+def dlrm_param_pspecs(params_shape) -> Dict[str, Any]:
+    """Row-shard the embedding tables over TP; MLPs replicate."""
+    pspecs = jax.tree.map(lambda _: P(), params_shape)
+    pspecs["tables"] = P(None, TP, None)
+    return pspecs

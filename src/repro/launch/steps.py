@@ -1,0 +1,567 @@
+"""Builds (step_fn, abstract inputs, shardings, analytic FLOPs) per dry-run
+cell: every (architecture x input shape) pair maps to the step the shape's
+`kind` dictates (train / prefill / decode / serve / retrieval / walk-update).
+
+Inputs are jax.ShapeDtypeStruct stand-ins — weak-type-correct, shardable, no
+device allocation (the dry-run lowers + compiles, never executes).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import get_arch
+from repro.launch import sharding as shr
+from repro.launch.mesh import batch_axes
+from repro.models import dlrm as dlrm_mod
+from repro.models import gnn as gnn_mod
+from repro.models import transformer as tfm
+from repro.train.optim import AdamWConfig, adamw_init, adamw_update
+
+F32 = jnp.float32
+BF16 = jnp.bfloat16
+I32 = jnp.int32
+
+S = jax.ShapeDtypeStruct
+
+
+@dataclass
+class CellPlan:
+    arch: str
+    shape: str
+    step_name: str
+    fn: Callable
+    args: Tuple[Any, ...]
+    in_shardings: Tuple[Any, ...]
+    out_shardings: Any
+    model_flops: float          # analytic "useful" FLOPs (6·N_active·D etc.)
+    donate_argnums: Tuple[int, ...] = ()
+    static_argnums: Tuple[int, ...] = ()
+
+
+def abstract_tree(tree):
+    return jax.tree.map(lambda x: S(x.shape, x.dtype), tree)
+
+
+def _pad(n: int, mult: int = 512) -> int:
+    """Round up to a shard multiple. Graph/candidate dims are padded to the
+    mesh size (production systems bucket-pad variable-size graph inputs;
+    masks carry validity). 512 covers every axis combination on both meshes."""
+    return -(-n // mult) * mult
+
+
+# ---------------------------------------------------------------------- LM
+
+
+def _lm_abstract_params(cfg):
+    return jax.eval_shape(partial(tfm.init_params, cfg=cfg),
+                          jax.random.PRNGKey(0))
+
+
+def _lm_train_plan(arch, cfg, info, mesh) -> CellPlan:
+    ba = batch_axes(mesh)
+    opt_cfg = AdamWConfig()
+    gb = info["global_batch"]
+    n_batch_shards = 1
+    for a in ba:
+        n_batch_shards *= dict(zip(mesh.axis_names, mesh.devices.shape))[a]
+    # microbatching: 1 sequence per chip per microbatch (grad accumulation)
+    n_micro = max(1, gb // n_batch_shards)
+    mb = gb // n_micro
+
+    def train_step(params, opt_state, tokens):
+        micro_tokens = tokens.reshape(n_micro, mb, tokens.shape[-1])
+
+        def accum(carry, batch):
+            from repro.models.act_sharding import constrain
+            gsum, lsum = carry
+            batch = constrain(batch, "batch", None)
+            loss, grads = jax.value_and_grad(tfm.lm_loss)(params, batch, cfg)
+            gsum = jax.tree.map(lambda a, g: a + g.astype(jnp.float32),
+                                gsum, grads)
+            return (gsum, lsum + loss), None
+
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (gsum, lsum), _ = jax.lax.scan(accum, (zeros, 0.0), micro_tokens)
+        grads = jax.tree.map(lambda g: g / n_micro, gsum)
+        params, opt_state, gnorm = adamw_update(grads, opt_state, params,
+                                                opt_cfg)
+        return params, opt_state, lsum / n_micro, gnorm
+
+    params = _lm_abstract_params(cfg)
+    opt = jax.eval_shape(adamw_init, params)
+    tokens = S((info["global_batch"], info["seq_len"] + 1), I32)
+    pspecs = shr.lm_param_pspecs(cfg)
+    p_shard = shr.named(mesh, _expand(pspecs, params))
+    o_shard = type(opt)(step=NamedSharding(mesh, P()), m=p_shard, v=p_shard)
+    tok_shard = NamedSharding(mesh, P(ba, None))
+    out_shard = (p_shard, o_shard, NamedSharding(mesh, P()),
+                 NamedSharding(mesh, P()))
+    tokens_count = info["global_batch"] * info["seq_len"]
+    flops = 6.0 * cfg.active_param_count() * tokens_count + _attn_flops(
+        cfg, info["global_batch"], info["seq_len"], train=True)
+    return CellPlan(arch, "train", "train_step", train_step,
+                    (params, opt, tokens), (p_shard, o_shard, tok_shard),
+                    out_shard, flops, donate_argnums=(0, 1))
+
+
+def _lm_prefill_plan(arch, cfg, info, mesh) -> CellPlan:
+    ba = batch_axes(mesh)
+    b, s_len = info["global_batch"], info["seq_len"]
+
+    def prefill(params, tokens):
+        logits, cache = tfm.prefill(params, tokens, cfg)
+        return logits, cache
+
+    params = _lm_abstract_params(cfg)
+    tokens = S((b, s_len), I32)
+    pspecs = shr.lm_param_pspecs(cfg)
+    p_shard = shr.named(mesh, _expand(pspecs, params))
+    cache_ps = shr.lm_cache_pspec(cfg, info, mesh)
+    out_shard = (NamedSharding(mesh, P(ba, None)),
+                 {"k": NamedSharding(mesh, cache_ps),
+                  "v": NamedSharding(mesh, cache_ps)})
+    flops = 2.0 * cfg.active_param_count() * b * s_len + _attn_flops(
+        cfg, b, s_len, train=False)
+    return CellPlan(arch, "prefill", "prefill", prefill,
+                    (params, tokens),
+                    (p_shard, NamedSharding(mesh, P(ba, None))),
+                    out_shard, flops)
+
+
+def _lm_decode_plan(arch, cfg, info, mesh) -> CellPlan:
+    ba = batch_axes(mesh)
+    b, ctx = info["global_batch"], info["seq_len"]
+
+    def serve_step(params, token, cache, cache_len):
+        return tfm.decode_step(params, token, cache, cache_len, cfg)
+
+    params = _lm_abstract_params(cfg)
+    token = S((b, 1), I32)
+    cache_shape = (cfg.n_layers, b, ctx, cfg.n_kv_heads, cfg.hd)
+    cache = {"k": S(cache_shape, cfg.dtype), "v": S(cache_shape, cfg.dtype)}
+    cache_len = S((), I32)
+    pspecs = shr.lm_param_pspecs(cfg)
+    p_shard = shr.named(mesh, _expand(pspecs, params))
+    cache_ps = NamedSharding(mesh, shr.lm_cache_pspec(cfg, info, mesh))
+    cache_shard = {"k": cache_ps, "v": cache_ps}
+    tok_shard = NamedSharding(mesh, P(ba, None) if b > 1 else P())
+    logits_shard = NamedSharding(mesh,
+                                 P(ba, None, None) if b > 1 else P())
+    out_shard = (logits_shard, cache_shard)
+    # decode: 2 FLOPs/param/token + attention reads 2*ctx*nh*hd*2 per layer
+    attn = 4.0 * cfg.n_layers * b * ctx * cfg.n_heads * cfg.hd
+    flops = 2.0 * cfg.active_param_count() * b + attn
+    return CellPlan(arch, "decode", "serve_step", serve_step,
+                    (params, token, cache, cache_len),
+                    (p_shard, tok_shard, cache_shard,
+                     NamedSharding(mesh, P())),
+                    out_shard, flops, donate_argnums=(2,))
+
+
+def _attn_flops(cfg, b, s, train: bool):
+    mult = 3 if train else 1  # fwd + 2x bwd
+    per_layer = 4.0 * b * s * s * cfg.n_heads * cfg.hd / 2  # causal half
+    window = cfg.sliding_window
+    if window and cfg.layer_pattern == "local_global":
+        local = 4.0 * b * s * min(window, s) * cfg.n_heads * cfg.hd
+        n_loc = cfg.n_layers // 2
+        return mult * (n_loc * local + (cfg.n_layers - n_loc) * per_layer)
+    return mult * cfg.n_layers * per_layer
+
+
+def _expand(pspec_dict, params):
+    """Layer pspecs are shared across the stacked-layer dict entries."""
+    out = dict(pspec_dict)
+    out["layers"] = {k: pspec_dict["layers"][k] for k in params["layers"]}
+    return out
+
+
+# --------------------------------------------------------------------- GNN
+
+
+def _gnn_forward(arch, params, batch, cfg):
+    if arch == "meshgraphnet":
+        return gnn_mod.mgn_forward(params, batch["node_feat"],
+                                   batch["edge_feat"], batch["senders"],
+                                   batch["receivers"], cfg)
+    if arch == "equiformer-v2":
+        return gnn_mod.eqv2_forward(params, batch["species"],
+                                    batch["positions"], batch["senders"],
+                                    batch["receivers"], cfg)
+    if arch == "gat-cora":
+        return gnn_mod.gat_forward(params, batch["node_feat"],
+                                   batch["senders"], batch["receivers"], cfg)
+    if arch == "graphsage-reddit":
+        return gnn_mod.sage_forward_full(params, batch["node_feat"],
+                                         batch["senders"],
+                                         batch["receivers"], cfg)
+    raise KeyError(arch)
+
+
+def _gnn_init(arch, cfg, d_feat):
+    key = jax.random.PRNGKey(0)
+    if arch == "meshgraphnet":
+        cfg = dataclasses.replace(cfg, d_node_in=d_feat, d_edge_in=4)
+        return cfg, jax.eval_shape(partial(gnn_mod.mgn_init, cfg=cfg), key)
+    if arch == "equiformer-v2":
+        return cfg, jax.eval_shape(partial(gnn_mod.eqv2_init, cfg=cfg), key)
+    if arch == "gat-cora":
+        cfg = dataclasses.replace(cfg, d_in=d_feat)
+        return cfg, jax.eval_shape(partial(gnn_mod.gat_init, cfg=cfg), key)
+    if arch == "graphsage-reddit":
+        cfg = dataclasses.replace(cfg, d_in=d_feat)
+        return cfg, jax.eval_shape(partial(gnn_mod.sage_init, cfg=cfg), key)
+    raise KeyError(arch)
+
+
+def _gnn_batch_specs(arch, n, e, d_feat):
+    batch = {
+        "senders": S((e,), I32),
+        "receivers": S((e,), I32),
+    }
+    if arch == "equiformer-v2":
+        batch["species"] = S((n, 1), F32)
+        batch["positions"] = S((n, 3), F32)
+    else:
+        batch["node_feat"] = S((n, d_feat), F32)
+    if arch == "meshgraphnet":
+        batch["edge_feat"] = S((e, 4), F32)
+    return batch
+
+
+def _gnn_batch_pspecs(arch, mesh):
+    ba = batch_axes(mesh)
+    b = {
+        "senders": NamedSharding(mesh, P(ba)),
+        "receivers": NamedSharding(mesh, P(ba)),
+    }
+    if arch == "equiformer-v2":
+        b["species"] = NamedSharding(mesh, P(ba, None))
+        b["positions"] = NamedSharding(mesh, P(ba, None))
+    else:
+        b["node_feat"] = NamedSharding(mesh, P(ba, None))
+    if arch == "meshgraphnet":
+        b["edge_feat"] = NamedSharding(mesh, P(ba, None))
+    return b
+
+
+def _gnn_loss(arch, params, batch, labels, cfg):
+    out = _gnn_forward(arch, params, batch, cfg)
+    if arch in ("meshgraphnet", "equiformer-v2"):
+        return jnp.mean((out - labels) ** 2)
+    logp = jax.nn.log_softmax(out, axis=-1)
+    return -jnp.take_along_axis(logp, labels[:, None], axis=1).mean()
+
+
+def _gnn_full_plan(arch, cfg, info, mesh, shape_name) -> CellPlan:
+    n, e, d_feat = info["n_nodes"], info["n_edges"], info.get("d_feat", 16)
+    if info["kind"] == "batched":
+        n = info["n_nodes"] * info["batch"]
+        e = info["n_edges"] * info["batch"]
+    n, e = _pad(n), _pad(e)
+    cfg, params = _gnn_init(arch, cfg, d_feat)
+    opt = jax.eval_shape(adamw_init, params)
+    opt_cfg = AdamWConfig()
+    batch = _gnn_batch_specs(arch, n, e, d_feat)
+    if arch in ("meshgraphnet", "equiformer-v2"):
+        labels = S((n, cfg.d_out), F32)
+    else:
+        labels = S((n,), I32)
+
+    def train_step(params, opt_state, batch, labels):
+        loss, grads = jax.value_and_grad(
+            lambda p: _gnn_loss(arch, p, batch, labels, cfg))(params)
+        params, opt_state, gnorm = adamw_update(grads, opt_state, params,
+                                                opt_cfg)
+        return params, opt_state, loss, gnorm
+
+    ba = batch_axes(mesh)
+    p_shard = shr.named(mesh, shr.gnn_param_pspecs(params))
+    o_shard = type(opt)(step=NamedSharding(mesh, P()),
+                        m=p_shard, v=p_shard)
+    b_shard = _gnn_batch_pspecs(arch, mesh)
+    lbl_shard = NamedSharding(mesh, P(ba, None) if labels.ndim == 2 else P(ba))
+    out_shard = (p_shard, o_shard, NamedSharding(mesh, P()),
+                 NamedSharding(mesh, P()))
+    flops = _gnn_flops(arch, cfg, n, e) * 3.0
+    return CellPlan(arch, shape_name, "train_step", train_step,
+                    (params, opt, batch, labels),
+                    (p_shard, o_shard, b_shard, lbl_shard),
+                    out_shard, flops, donate_argnums=(0, 1))
+
+
+def _gnn_sampled_plan(arch, cfg, info, mesh, shape_name) -> CellPlan:
+    """minibatch_lg: two-hop fanout sampling INSIDE the lowered step (uses the
+    Wharf CSR machinery), then the model on the sampled star subgraph."""
+    n, e = _pad(info["n_nodes"]), _pad(info["n_edges"])
+    bsz = info["batch_nodes"]
+    f1, f2 = info["fanout"]
+    d_feat = info["d_feat"]
+    cfg, params = _gnn_init(arch, cfg, d_feat)
+    opt = jax.eval_shape(adamw_init, params)
+    opt_cfg = AdamWConfig()
+    e_cap = e  # directed edge capacity
+
+    def sample(key, offsets, neighbors, seeds, fan):
+        b = seeds.shape[0]
+        start = offsets[seeds]
+        deg = offsets[seeds + 1] - start
+        r = jax.random.randint(key, (b, fan), 0, jnp.maximum(deg, 1)[:, None])
+        nbrs = neighbors[jnp.clip(start[:, None] + r, 0, e_cap - 1)]
+        mask = jnp.broadcast_to(deg[:, None] > 0, (b, fan))
+        return jnp.where(mask, nbrs, seeds[:, None]), mask
+
+    def train_step(params, opt_state, feats, offsets, neighbors, seeds,
+                   labels, key):
+        k1, k2 = jax.random.split(key)
+        h1, m1 = sample(k1, offsets, neighbors, seeds, f1)           # [B,f1]
+        h2, m2 = sample(k2, offsets, neighbors, h1.reshape(-1), f2)
+        h2 = h2.reshape(bsz, f1, f2)
+
+        def loss_fn(p):
+            if arch == "graphsage-reddit":
+                nbr = {"h1": feats[h1], "h2": feats[h2]}
+                msk = {"h1": m1.astype(F32),
+                       "h2": m2.reshape(bsz, f1, f2).astype(F32)}
+                out = gnn_mod.sage_forward_sampled(p, feats[seeds], nbr, msk,
+                                                   cfg)
+            else:
+                # star subgraph: local ids 0..B-1 seeds, then h1, then h2
+                nodes = jnp.concatenate(
+                    [seeds, h1.reshape(-1), h2.reshape(-1)])
+                loc_seed = jnp.arange(bsz, dtype=I32)
+                loc_h1 = bsz + jnp.arange(bsz * f1, dtype=I32)
+                loc_h2 = bsz + bsz * f1 + jnp.arange(bsz * f1 * f2, dtype=I32)
+                senders = jnp.concatenate(
+                    [loc_h1, loc_h2])
+                receivers = jnp.concatenate(
+                    [jnp.repeat(loc_seed, f1),
+                     jnp.repeat(loc_h1, f2)])
+                batch = {"senders": senders, "receivers": receivers}
+                if arch == "equiformer-v2":
+                    batch["species"] = feats[nodes][:, :1]
+                    batch["positions"] = feats[nodes][:, 1:4]
+                else:
+                    batch["node_feat"] = feats[nodes]
+                if arch == "meshgraphnet":
+                    batch["edge_feat"] = jnp.ones(
+                        (senders.shape[0], 4), F32)
+                out = _gnn_forward(arch, params, batch, cfg)[:bsz]
+            if arch in ("meshgraphnet", "equiformer-v2"):
+                return jnp.mean((out - labels) ** 2)
+            logp = jax.nn.log_softmax(out, axis=-1)
+            return -jnp.take_along_axis(logp, labels[:, None], axis=1).mean()
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        params, opt_state, gnorm = adamw_update(grads, opt_state, params,
+                                                opt_cfg)
+        return params, opt_state, loss, gnorm
+
+    feats = S((n, d_feat), F32)
+    offsets = S((n + 1,), I32)
+    neighbors = S((e,), I32)
+    seeds = S((bsz,), I32)
+    if arch in ("meshgraphnet", "equiformer-v2"):
+        labels = S((bsz, cfg.d_out), F32)
+        lbl_ps = P(batch_axes(mesh), None)
+    else:
+        labels = S((bsz,), I32)
+        lbl_ps = P(batch_axes(mesh))
+    key = S((2,), jnp.uint32)
+    ba = batch_axes(mesh)
+    p_shard = shr.named(mesh, shr.gnn_param_pspecs(params))
+    o_shard = type(opt)(step=NamedSharding(mesh, P()), m=p_shard, v=p_shard)
+    in_sh = (p_shard, o_shard,
+             NamedSharding(mesh, P(shr.TP, None)),   # feature table row-sharded
+             NamedSharding(mesh, P()),               # offsets replicated
+             NamedSharding(mesh, P(shr.TP)),         # neighbor array row-sharded
+             NamedSharding(mesh, P(ba)),
+             NamedSharding(mesh, lbl_ps),
+             NamedSharding(mesh, P()))
+    out_shard = (p_shard, o_shard, NamedSharding(mesh, P()),
+                 NamedSharding(mesh, P()))
+    sub_n = bsz * (1 + f1 + f1 * f2)
+    sub_e = bsz * (f1 + f1 * f2)
+    flops = _gnn_flops(arch, cfg, sub_n, sub_e) * 3.0
+    return CellPlan(arch, shape_name, "train_step", train_step,
+                    (params, opt, feats, offsets, neighbors, seeds, labels,
+                     key),
+                    in_sh, out_shard, flops, donate_argnums=(0, 1))
+
+
+def _gnn_flops(arch, cfg, n, e):
+    if arch == "meshgraphnet":
+        h = cfg.d_hidden
+        per = cfg.n_layers * (2 * e * (3 * h) * h + 2 * e * h * h
+                              + 2 * n * (2 * h) * h + 2 * n * h * h)
+        return per
+    if arch == "equiformer-v2":
+        c = cfg.d_hidden
+        blocks = gnn_mod._m_blocks(cfg.l_max, cfg.m_max)
+        so2 = sum(2 * e * (len(b) * c) ** 2 for b in blocks)
+        return cfg.n_layers * (so2 + 2 * n * c * 2 * c * 2)
+    if arch == "gat-cora":
+        d0, h, heads = cfg.d_in, cfg.d_hidden, cfg.n_heads
+        return (2 * n * d0 * heads * h + 2 * e * heads * h
+                + 2 * n * heads * h * cfg.n_classes)
+    if arch == "graphsage-reddit":
+        d0, h = cfg.d_in, cfg.d_hidden
+        return (2 * (n + e) * d0 * h + 2 * n * h * cfg.n_classes) * 2
+    raise KeyError(arch)
+
+
+# ------------------------------------------------------------------- recsys
+
+
+def _dlrm_plan(arch, cfg, info, mesh, shape_name) -> CellPlan:
+    ba = batch_axes(mesh)
+    kind = info["kind"]
+    params = jax.eval_shape(partial(dlrm_mod.dlrm_init, cfg=cfg),
+                            jax.random.PRNGKey(0))
+    p_shard = shr.named(mesh, shr.dlrm_param_pspecs(params))
+
+    if kind == "retrieval":
+        n_cand = _pad(info["n_candidates"])
+
+        def retrieval(params, dense, sparse_idx, cand_emb):
+            return dlrm_mod.retrieval_score(params, dense, sparse_idx,
+                                            cand_emb, cfg)
+
+        args = (params, S((1, cfg.n_dense), F32),
+                S((1, cfg.n_sparse, cfg.multi_hot), I32),
+                S((n_cand, cfg.embed_dim), F32))
+        cand_axes = tuple(a for a in ("pod", "data", "model")
+                          if a in mesh.axis_names)
+        in_sh = (p_shard, NamedSharding(mesh, P()), NamedSharding(mesh, P()),
+                 NamedSharding(mesh, P(cand_axes, None)))
+        out_sh = NamedSharding(mesh, P(None, cand_axes))
+        flops = 2.0 * n_cand * cfg.embed_dim
+        return CellPlan(arch, shape_name, "retrieval_score", retrieval, args,
+                        in_sh, out_sh, flops)
+
+    b = info["batch"]
+    dense = S((b, cfg.n_dense), F32)
+    sparse = S((b, cfg.n_sparse, cfg.multi_hot), I32)
+    mlp_flops = 0
+    sizes = list(cfg.bot_mlp)
+    mlp_flops += sum(2 * a * bb for a, bb in zip(sizes[:-1], sizes[1:]))
+    tsz = [cfg.d_interact] + list(cfg.top_mlp)[1:]
+    mlp_flops += sum(2 * a * bb for a, bb in zip(tsz[:-1], tsz[1:]))
+    f = cfg.n_sparse + 1
+    interact = 2 * f * f * cfg.embed_dim
+    per_sample = mlp_flops + interact
+
+    if kind == "serve":
+        def serve(params, dense, sparse_idx):
+            return dlrm_mod.dlrm_forward(params, dense, sparse_idx, cfg)
+
+        in_sh = (p_shard, NamedSharding(mesh, P(ba, None)),
+                 NamedSharding(mesh, P(ba, None, None)))
+        return CellPlan(arch, shape_name, "serve_step", serve,
+                        (params, dense, sparse), in_sh,
+                        NamedSharding(mesh, P(ba)), per_sample * b)
+
+    opt = jax.eval_shape(adamw_init, params)
+    opt_cfg = AdamWConfig()
+
+    def train_step(params, opt_state, dense, sparse_idx, labels):
+        loss, grads = jax.value_and_grad(dlrm_mod.dlrm_loss)(
+            params, dense, sparse_idx, labels, cfg)
+        params, opt_state, gnorm = adamw_update(grads, opt_state, params,
+                                                opt_cfg)
+        return params, opt_state, loss, gnorm
+
+    o_shard = type(opt)(step=NamedSharding(mesh, P()), m=p_shard, v=p_shard)
+    labels = S((b,), F32)
+    in_sh = (p_shard, o_shard, NamedSharding(mesh, P(ba, None)),
+             NamedSharding(mesh, P(ba, None, None)),
+             NamedSharding(mesh, P(ba)))
+    out_sh = (p_shard, o_shard, NamedSharding(mesh, P()),
+              NamedSharding(mesh, P()))
+    return CellPlan(arch, shape_name, "train_step", train_step,
+                    (params, opt, dense, sparse, labels), in_sh, out_sh,
+                    per_sample * b * 3.0, donate_argnums=(0, 1))
+
+
+# ------------------------------------------------------------------- wharf
+
+
+def _wharf_plan(arch, cfg, info, mesh, shape_name) -> CellPlan:
+    """The paper's batch walk-update step, distributed (eager-merge form)."""
+    from repro.distr.engine import distributed_update_step, wharf_shardings
+
+    wcfg = cfg.walk_config()
+    t = cfg.n_vertices * cfg.n_walks_per_vertex * cfg.length
+    n_chunks = -(-t // cfg.chunk_b)
+    batch_e = info["batch_edges"]
+    U32, U64 = jnp.uint32, jnp.uint64
+
+    graph = {
+        "codes": S((cfg.edge_capacity,), U64),
+        "offsets": S((cfg.n_vertices + 1,), I32),
+        "num_edges": S((), I32),
+    }
+    store = {
+        "owner": S((t,), U32), "code": S((t,), U64), "epoch": S((t,), U32),
+        "offsets": S((cfg.n_vertices + 1,), I32),
+        "vmin": S((cfg.n_vertices,), U32), "vmax": S((cfg.n_vertices,), U32),
+        "chunk_first": S((n_chunks,), U64), "chunk_last": S((n_chunks,), U64),
+        "slot_epoch": S((cfg.n_vertices * cfg.n_walks_per_vertex
+                         * cfg.length,), U32),
+    }
+    args = (graph, store, S((batch_e,), U32), S((batch_e,), U32),
+            S((), U32), S((2,), jnp.uint32))
+
+    merge_impl = info.get("merge_impl", "lexsort")  # paper-faithful default
+    do_merge = info.get("do_merge", True)
+
+    def step(graph_d, store_d, ins_src, ins_dst, new_epoch, key):
+        return distributed_update_step(graph_d, store_d, ins_src, ins_dst,
+                                       new_epoch, key, cfg,
+                                       merge_impl=merge_impl,
+                                       do_merge=do_merge)
+
+    g_sh, s_sh = wharf_shardings(mesh, cfg)
+    in_sh = (g_sh, s_sh, NamedSharding(mesh, P()), NamedSharding(mesh, P()),
+             NamedSharding(mesh, P()), NamedSharding(mesh, P()))
+    out_sh = s_sh
+    # useful work: |I| ≈ capacity * l/2 resamples + merge sort of T + |I|
+    import math
+    flops = (cfg.rewalk_capacity * cfg.length * 20.0
+             + (t + cfg.rewalk_capacity * cfg.length)
+             * math.log2(max(t, 2)) * 2)
+    return CellPlan(arch, shape_name, "walk_update_step", step, args, in_sh,
+                    out_sh, flops, donate_argnums=(1,))
+
+
+# ------------------------------------------------------------------ public
+
+
+def build_cell(arch_name: str, shape_name: str, mesh,
+               smoke: bool = False) -> CellPlan:
+    spec = get_arch(arch_name)
+    info = spec.shapes[shape_name]
+    cfg = spec.make_config(smoke)
+    if spec.family == "lm":
+        kind = info["kind"]
+        if kind == "train":
+            return _lm_train_plan(arch_name, cfg, info, mesh)
+        if kind == "prefill":
+            return _lm_prefill_plan(arch_name, cfg, info, mesh)
+        return _lm_decode_plan(arch_name, cfg, info, mesh)
+    if spec.family == "gnn":
+        if info["kind"] == "sampled":
+            return _gnn_sampled_plan(arch_name, cfg, info, mesh, shape_name)
+        return _gnn_full_plan(arch_name, cfg, info, mesh, shape_name)
+    if spec.family == "recsys":
+        return _dlrm_plan(arch_name, cfg, info, mesh, shape_name)
+    if spec.family == "wharf":
+        return _wharf_plan(arch_name, cfg, info, mesh, shape_name)
+    raise KeyError(spec.family)

@@ -1,0 +1,120 @@
+"""Training/streaming launcher.
+
+  PYTHONPATH=src python -m repro.launch.train --arch gemma2-2b --smoke \
+      --steps 20 --ckpt-dir /tmp/ckpt
+  PYTHONPATH=src python -m repro.launch.train --arch wharf-stream --smoke \
+      --steps 10
+
+LM archs run next-token training on synthetic token streams; wharf-stream
+runs the paper's streaming walk-update loop (RMAT edge batches). Both go
+through the fault-tolerant TrainLoop (checkpoint/restart, straggler monitor).
+Real-cluster deployment points `--mesh` at the production mesh; on CPU it
+runs single-device with the same code path.
+"""
+from __future__ import annotations
+
+import argparse
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_arch
+from repro.train.checkpoint import CheckpointManager
+from repro.train.optim import AdamWConfig, adamw_init, adamw_update
+from repro.train.runtime import TrainLoop
+
+
+def lm_trainer(arch: str, smoke: bool, batch: int, seq: int):
+    from repro.models import transformer as tfm
+
+    cfg = get_arch(arch).make_config(smoke)
+    params = tfm.init_params(jax.random.PRNGKey(0), cfg)
+    opt_cfg = AdamWConfig(lr=1e-3)
+    state = {"params": params, "opt": adamw_init(params)}
+
+    @jax.jit
+    def _step(state, tokens):
+        loss, grads = jax.value_and_grad(tfm.lm_loss)(state["params"],
+                                                      tokens, cfg)
+        params, opt, gnorm = adamw_update(grads, state["opt"],
+                                          state["params"], opt_cfg)
+        return {"params": params, "opt": opt}, loss, gnorm
+
+    def step_fn(state, tokens, key):
+        state, loss, gnorm = _step(state, tokens)
+        return state, {"loss": float(loss), "gnorm": float(gnorm)}
+
+    def batch_fn(step, key):
+        return jax.random.randint(key, (batch, seq + 1), 0, cfg.vocab_size,
+                                  dtype=jnp.int32)
+
+    return state, step_fn, batch_fn
+
+
+def wharf_trainer(arch: str, smoke: bool, batch_edges: int):
+    from repro.core import StreamingGraph, generate_corpus
+    from repro.core.update import WalkEngine
+    from repro.data.streams import rmat_edges
+    import math
+
+    cfg = get_arch(arch).make_config(smoke)
+    wcfg = cfg.walk_config()
+    log2n = int(math.log2(cfg.n_vertices))
+    src, dst = rmat_edges(jax.random.PRNGKey(1), batch_edges * 4, log2n)
+    graph = StreamingGraph.from_edges(src, dst, cfg.n_vertices,
+                                      cfg.edge_capacity)
+    store = generate_corpus(jax.random.PRNGKey(2), graph, wcfg)
+    engine = WalkEngine(graph=graph, store=store, cfg=wcfg,
+                        rewalk_capacity=cfg.rewalk_capacity)
+    state = {"store_code": store.code}  # checkpointable view
+
+    def step_fn(state, batch, key):
+        isrc, idst = batch
+        n_aff = engine.update_batch(key, isrc, idst, None, None)
+        return {"store_code": engine.store.code}, {"affected_walks": n_aff}
+
+    def batch_fn(step, key):
+        return rmat_edges(key, batch_edges, log2n)
+
+    return state, step_fn, batch_fn
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--batch-edges", type=int, default=64)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=10)
+    args = ap.parse_args()
+
+    spec = get_arch(args.arch)
+    if spec.family == "lm":
+        state, step_fn, batch_fn = lm_trainer(args.arch, args.smoke,
+                                              args.batch, args.seq)
+    elif spec.family == "wharf":
+        state, step_fn, batch_fn = wharf_trainer(args.arch, args.smoke,
+                                                 args.batch_edges)
+    else:
+        raise SystemExit(f"use examples/ drivers for family {spec.family}")
+
+    loop = TrainLoop(step_fn=step_fn, batch_fn=batch_fn,
+                     ckpt=CheckpointManager(args.ckpt_dir),
+                     ckpt_every=args.ckpt_every)
+    state, start = loop.resume(state)
+    print(f"starting at step {start}")
+
+    def on_metrics(step, dt, metrics):
+        print(f"step {step}: {dt * 1e3:.1f}ms {metrics}")
+
+    loop.run(state, start, args.steps, on_metrics)
+    if loop.straggler.events:
+        print("straggler events:", loop.straggler.events)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,108 @@
+"""DLRM-RM2 (paper pool arch): sparse embedding tables + dot interaction + MLPs.
+
+EmbeddingBag is built from `jnp.take` + `jax.ops.segment_sum` (JAX has no
+native EmbeddingBag — the brief makes this part of the system). Tables are
+row-sharded over the `model` mesh axis in the launch layer (the same
+vertex-sharding machinery as the Wharf triplet store, DESIGN.md §4).
+
+retrieval_cand scores 1 query against 10^6 candidates as one batched dot
+(two-tower style), optionally over a Wharf walk-derived candidate set
+(Pixie-style walk-based candidate generation).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+@dataclass(frozen=True)
+class DLRMConfig:
+    name: str = "dlrm-rm2"
+    n_dense: int = 13
+    n_sparse: int = 26
+    embed_dim: int = 64
+    table_rows: int = 1_000_000           # rows per sparse table
+    bot_mlp: Tuple[int, ...] = (13, 512, 256, 64)
+    top_mlp: Tuple[int, ...] = (512, 512, 256, 1)
+    multi_hot: int = 1                     # lookups per field (bag size)
+    dtype: Any = F32
+
+    @property
+    def d_interact(self) -> int:
+        f = self.n_sparse + 1
+        return f * (f - 1) // 2 + self.embed_dim
+
+
+def _mlp_params(key, sizes, dtype):
+    ks = jax.random.split(key, len(sizes) - 1)
+    return [{"w": (jax.random.normal(k, (a, b), F32) / a ** 0.5).astype(dtype),
+             "b": jnp.zeros((b,), dtype)}
+            for k, (a, b) in zip(ks, zip(sizes[:-1], sizes[1:]))]
+
+
+def _mlp(x, layers, final_act=False):
+    for i, l in enumerate(layers):
+        x = x @ l["w"] + l["b"]
+        if i < len(layers) - 1 or final_act:
+            x = jax.nn.relu(x)
+    return x
+
+
+def dlrm_init(key, cfg: DLRMConfig):
+    k1, k2, k3 = jax.random.split(key, 3)
+    top_in = cfg.d_interact
+    return {
+        "tables": (jax.random.normal(
+            k1, (cfg.n_sparse, cfg.table_rows, cfg.embed_dim), F32)
+            * 0.01).astype(cfg.dtype),
+        "bot": _mlp_params(k2, list(cfg.bot_mlp), cfg.dtype),
+        "top": _mlp_params(k3, [top_in] + list(cfg.top_mlp)[1:], cfg.dtype),
+    }
+
+
+def embedding_bag(table, indices, offsets_mask=None):
+    """Sum-bag lookup: indices [B, H] -> [B, D] (take + segment-style sum)."""
+    emb = jnp.take(table, indices, axis=0)          # [B, H, D]
+    if offsets_mask is not None:
+        emb = emb * offsets_mask[..., None]
+    return emb.sum(axis=1)
+
+
+def dlrm_forward(params, dense, sparse_idx, cfg: DLRMConfig):
+    """dense [B, n_dense]; sparse_idx [B, n_sparse, multi_hot] -> logits [B]."""
+    b = dense.shape[0]
+    x = _mlp(dense.astype(cfg.dtype), params["bot"], final_act=True)  # [B, D]
+    # one bag per sparse field
+    bags = jax.vmap(
+        lambda tbl, idx: embedding_bag(tbl, idx),
+        in_axes=(0, 1), out_axes=1,
+    )(params["tables"], sparse_idx)                  # [B, n_sparse, D]
+    feats = jnp.concatenate([x[:, None, :], bags], axis=1)  # [B, F, D]
+    f = feats.shape[1]
+    inter = jnp.einsum("bfd,bgd->bfg", feats, feats)
+    iu, ju = jnp.triu_indices(f, k=1)
+    flat = inter[:, iu, ju]                          # [B, F(F-1)/2]
+    top_in = jnp.concatenate([x, flat], axis=1)
+    return _mlp(top_in, params["top"])[:, 0]
+
+
+def dlrm_loss(params, dense, sparse_idx, labels, cfg: DLRMConfig):
+    logits = dlrm_forward(params, dense, sparse_idx, cfg)
+    return jnp.mean(
+        jnp.maximum(logits, 0) - logits * labels
+        + jnp.log1p(jnp.exp(-jnp.abs(logits))))
+
+
+def retrieval_score(params, dense, sparse_idx, cand_emb, cfg: DLRMConfig):
+    """Score one query against [N_cand, D] candidate embeddings (batched dot)."""
+    x = _mlp(dense.astype(cfg.dtype), params["bot"], final_act=True)  # [B, D]
+    bags = jax.vmap(lambda tbl, idx: embedding_bag(tbl, idx),
+                    in_axes=(0, 1), out_axes=1)(params["tables"], sparse_idx)
+    q = x + bags.mean(axis=1)                        # [B, D] query tower
+    return q @ cand_emb.T                            # [B, N_cand]

@@ -1,0 +1,130 @@
+"""Skip-gram with negative sampling (SGNS) over Wharf-maintained walks.
+
+This is the paper's primary downstream consumer (§7.6: DeepWalk/node2vec
+embeddings -> vertex classification): pairs are drawn from walk windows, the
+objective is log σ(u·v⁺) + Σ log σ(-u·v⁻). `vskip`-style incremental refresh:
+after a Wharf batch update only the affected walks' windows are re-trained.
+
+The fused Pallas kernel (kernels/sgns.py) implements the hot inner step
+(gather + [B,D]x[D,K] MXU matmul + logsigmoid + scatter-grad) for TPU.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+@dataclass(frozen=True)
+class SGNSConfig:
+    n_vertices: int
+    dim: int = 128
+    window: int = 5
+    n_negative: int = 5
+    lr: float = 0.05
+    dtype: Any = F32
+
+
+def sgns_init(key, cfg: SGNSConfig):
+    k1, k2 = jax.random.split(key)
+    return {
+        "in": (jax.random.normal(k1, (cfg.n_vertices, cfg.dim), F32)
+               * (1.0 / cfg.dim ** 0.5)).astype(cfg.dtype),
+        "out": jnp.zeros((cfg.n_vertices, cfg.dim), cfg.dtype),
+    }
+
+
+def window_pairs(walks, window: int):
+    """All (center, context) pairs within ±window from a [W, L] walk matrix."""
+    w, l = walks.shape
+    centers, contexts = [], []
+    for off in range(1, window + 1):
+        centers.append(walks[:, :-off].reshape(-1))
+        contexts.append(walks[:, off:].reshape(-1))
+        centers.append(walks[:, off:].reshape(-1))
+        contexts.append(walks[:, :-off].reshape(-1))
+    return jnp.concatenate(centers), jnp.concatenate(contexts)
+
+
+def sgns_loss(params, centers, contexts, negatives):
+    """centers/contexts [B]; negatives [B, K]. SUM over pairs (word2vec
+    applies per-pair updates; a mean-normalized loss would shrink the
+    effective step size by the batch size)."""
+    u = params["in"][centers]                       # [B, D]
+    vp = params["out"][contexts]                    # [B, D]
+    vn = params["out"][negatives]                   # [B, K, D]
+    pos = jnp.sum(u * vp, axis=-1)
+    neg = jnp.einsum("bd,bkd->bk", u, vn)
+    return -(jax.nn.log_sigmoid(pos).sum()
+             + jax.nn.log_sigmoid(-neg).sum())
+
+
+@partial(jax.jit, donate_argnums=(0,))
+def sgns_step(params, centers, contexts, negatives, lr):
+    loss, grads = jax.value_and_grad(sgns_loss)(params, centers, contexts,
+                                                negatives)
+    params = jax.tree.map(lambda p, g: p - lr * g.astype(p.dtype), params, grads)
+    return params, loss / centers.shape[0]
+
+
+def train_epoch(key, params, walks, cfg: SGNSConfig, batch: int = 8192,
+                walk_mask=None):
+    """One pass over window pairs; if walk_mask is given (incremental mode),
+    only pairs from masked (affected) walks are used."""
+    if walk_mask is not None:
+        # zero-out unaffected walks by pointing their pairs at vertex 0 with
+        # zero learning contribution via masking in the batch selection below
+        keep = jnp.nonzero(walk_mask, size=walks.shape[0], fill_value=0)[0]
+        walks = walks[keep]
+    centers, contexts = window_pairs(walks, cfg.window)
+    n = centers.shape[0]
+    key, kp = jax.random.split(key)
+    perm = jax.random.permutation(kp, n)
+    centers, contexts = centers[perm], contexts[perm]
+    losses = []
+    for i in range(0, n - batch + 1, batch):
+        key, kn = jax.random.split(key)
+        negs = jax.random.randint(kn, (batch, cfg.n_negative), 0,
+                                  cfg.n_vertices)
+        params, loss = sgns_step(params, centers[i:i + batch].astype(I32),
+                                 contexts[i:i + batch].astype(I32),
+                                 negs, cfg.lr)
+        losses.append(loss)
+    mean_loss = jnp.stack(losses).mean() if losses else jnp.asarray(0.0)
+    return params, mean_loss
+
+
+def logistic_eval(embeddings, labels, train_frac=0.7, seed=0, steps=300,
+                  lr=0.5):
+    """Multinomial logistic probe on embeddings (vertex classification F1)."""
+    import numpy as np
+    n = embeddings.shape[0]
+    rng = np.random.default_rng(seed)
+    perm = rng.permutation(n)
+    cut = int(n * train_frac)
+    tr, te = perm[:cut], perm[cut:]
+    x = jnp.asarray(embeddings, F32)
+    x = x / jnp.maximum(jnp.linalg.norm(x, axis=1, keepdims=True), 1e-6)
+    y = jnp.asarray(labels, I32)
+    n_cls = int(y.max()) + 1
+    w = jnp.zeros((x.shape[1], n_cls), F32)
+
+    @jax.jit
+    def step(w):
+        def loss(w):
+            logits = x[tr] @ w
+            return -jnp.take_along_axis(
+                jax.nn.log_softmax(logits, -1), y[tr, None], axis=1).mean()
+        g = jax.grad(loss)(w)
+        return w - lr * g
+
+    for _ in range(steps):
+        w = step(w)
+    pred = jnp.argmax(x[te] @ w, axis=1)
+    return float((pred == y[te]).mean())

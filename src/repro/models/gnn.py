@@ -1,0 +1,335 @@
+"""GNN architectures: MeshGraphNet, EquiformerV2 (eSCN), GAT, GraphSAGE.
+
+Message passing is built on `jax.ops.segment_sum`/`segment_max` over an
+edge-index (JAX has no CSR SpMM — the scatter/gather formulation IS the system,
+per the assignment brief). Graph batches are (senders, receivers, node_feat,
+edge_feat) with static shapes; the neighbor sampler for GraphSAGE minibatching
+lives in repro/models/sampling.py and reuses the Wharf CSR machinery.
+
+EquiformerV2 note (DESIGN.md §2): node features are irreps [N, (L+1)^2, C].
+The eSCN trick — SO(2) block-diagonal convolution in an edge-aligned frame —
+is implemented with per-|m| dense channel mixes (the O(L^3) compute pattern);
+the Wigner rotation into/out of the edge frame is approximated by an
+RBF-conditioned per-(l,m) diagonal gate, which preserves shape/compute
+structure (the roofline target) though not exact SO(3) equivariance.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def segment_softmax(logits, segment_ids, num_segments):
+    m = jax.ops.segment_max(logits, segment_ids, num_segments=num_segments)
+    z = jnp.exp(logits - m[segment_ids])
+    s = jax.ops.segment_sum(z, segment_ids, num_segments=num_segments)
+    return z / jnp.maximum(s[segment_ids], 1e-9)
+
+
+def _mlp_params(key, sizes, dtype=F32):
+    ks = jax.random.split(key, len(sizes) - 1)
+    return [{"w": (jax.random.normal(k, (a, b), F32) / (a ** 0.5)).astype(dtype),
+             "b": jnp.zeros((b,), dtype)}
+            for k, (a, b) in zip(ks, zip(sizes[:-1], sizes[1:]))]
+
+
+def _mlp(x, layers, act=jax.nn.relu, final_act=False):
+    for i, l in enumerate(layers):
+        x = x @ l["w"] + l["b"]
+        if i < len(layers) - 1 or final_act:
+            x = act(x)
+    return x
+
+
+# ------------------------------------------------------------ MeshGraphNet
+
+
+@dataclass(frozen=True)
+class MGNConfig:
+    name: str = "meshgraphnet"
+    n_layers: int = 15
+    d_hidden: int = 128
+    mlp_layers: int = 2
+    d_node_in: int = 12
+    d_edge_in: int = 7
+    d_out: int = 3
+    dtype: Any = F32
+
+
+def mgn_init(key, cfg: MGNConfig):
+    ks = jax.random.split(key, 4 + cfg.n_layers * 2)
+    h, m = cfg.d_hidden, cfg.mlp_layers
+    hidden = [h] * m
+    params = {
+        "enc_node": _mlp_params(ks[0], [cfg.d_node_in] + hidden + [h], cfg.dtype),
+        "enc_edge": _mlp_params(ks[1], [cfg.d_edge_in] + hidden + [h], cfg.dtype),
+        "dec": _mlp_params(ks[2], [h] + hidden + [cfg.d_out], cfg.dtype),
+        "blocks": [
+            {"edge": _mlp_params(ks[4 + 2 * i], [3 * h] + hidden + [h], cfg.dtype),
+             "node": _mlp_params(ks[5 + 2 * i], [2 * h] + hidden + [h], cfg.dtype)}
+            for i in range(cfg.n_layers)
+        ],
+    }
+    return params
+
+
+def mgn_forward(params, node_feat, edge_feat, senders, receivers,
+                cfg: MGNConfig):
+    n = node_feat.shape[0]
+    x = _mlp(node_feat.astype(cfg.dtype), params["enc_node"])
+    e = _mlp(edge_feat.astype(cfg.dtype), params["enc_edge"])
+    for blk in params["blocks"]:
+        msg_in = jnp.concatenate([e, x[senders], x[receivers]], axis=-1)
+        e = e + _mlp(msg_in, blk["edge"])
+        agg = jax.ops.segment_sum(e, receivers, num_segments=n)
+        x = x + _mlp(jnp.concatenate([x, agg], axis=-1), blk["node"])
+    return _mlp(x, params["dec"])
+
+
+# ------------------------------------------------------- EquiformerV2/eSCN
+
+
+@dataclass(frozen=True)
+class EqV2Config:
+    name: str = "equiformer-v2"
+    n_layers: int = 12
+    d_hidden: int = 128
+    l_max: int = 6
+    m_max: int = 2
+    n_heads: int = 8
+    n_rbf: int = 32
+    d_out: int = 1
+    dtype: Any = F32
+
+    @property
+    def n_irreps(self) -> int:
+        return (self.l_max + 1) ** 2
+
+
+def _m_blocks(l_max: int, m_max: int):
+    """For each |m| <= m_max the (l, m) component indices (real SH layout)."""
+    blocks = []
+    for m in range(m_max + 1):
+        idx = []
+        for l in range(m, l_max + 1):
+            base = l * l + l  # (l, 0) position
+            idx.append(base + m)
+            if m > 0:
+                idx.append(base - m)
+        blocks.append(jnp.asarray(sorted(idx), I32))
+    return blocks
+
+
+def eqv2_init(key, cfg: EqV2Config):
+    c = cfg.d_hidden
+    ks = jax.random.split(key, 6 + cfg.n_layers)
+    blocks = _m_blocks(cfg.l_max, cfg.m_max)
+    layers = []
+    for i in range(cfg.n_layers):
+        lk = jax.random.split(ks[6 + i], 4 + len(blocks))
+        so2 = [
+            (jax.random.normal(lk[4 + m], (len(blocks[m]) * c,
+                                           len(blocks[m]) * c), F32)
+             / ((len(blocks[m]) * c) ** 0.5)).astype(cfg.dtype)
+            for m in range(len(blocks))
+        ]
+        layers.append({
+            "so2": so2,
+            "rbf_gate": _mlp_params(lk[0], [cfg.n_rbf, c, cfg.n_irreps], cfg.dtype),
+            "attn_q": (jax.random.normal(lk[1], (c, cfg.n_heads), F32) / c ** 0.5).astype(cfg.dtype),
+            "attn_k": (jax.random.normal(lk[2], (c, cfg.n_heads), F32) / c ** 0.5).astype(cfg.dtype),
+            "ffn": _mlp_params(lk[3], [c, 2 * c, c], cfg.dtype),
+        })
+    return {
+        "embed": _mlp_params(ks[0], [1, c], cfg.dtype),   # scalar (l=0) embed
+        "layers": layers,
+        "head": _mlp_params(ks[1], [c, c, cfg.d_out], cfg.dtype),
+    }
+
+
+def eqv2_forward(params, species, positions, senders, receivers,
+                 cfg: EqV2Config):
+    """species [N,1] float, positions [N,3] -> per-graph scalar [N, d_out].
+
+    §Perf (EXPERIMENTS.md, equiformer-v2 x ogb_products): edge tensors are
+    restricted to the SO(2)-ACTIVE irrep components (|m| <= m_max: 29 of 49
+    for l_max=6, m_max=2) — the actual eSCN truncation. The naive version
+    gathered/scattered all (l_max+1)^2 components per edge; since edge count
+    >> node count, this cuts the dominant memory term ~40%, and the per-m
+    block outputs are concatenated contiguously instead of 3 full-tensor
+    scatters."""
+    n = species.shape[0]
+    c = cfg.d_hidden
+    blocks = _m_blocks(cfg.l_max, cfg.m_max)
+    idx_active = jnp.concatenate(blocks)          # active components, m-major
+    ranges = []
+    start = 0
+    for b in blocks:
+        ranges.append((start, start + len(b)))
+        start += len(b)
+    x = jnp.zeros((n, cfg.n_irreps, c), cfg.dtype)
+    x = x.at[:, 0, :].set(_mlp(species.astype(cfg.dtype), params["embed"]))
+    rel = positions[receivers] - positions[senders]
+    dist = jnp.linalg.norm(rel + 1e-9, axis=-1, keepdims=True)
+    rbf = jnp.exp(-((dist - jnp.linspace(0.0, 5.0, cfg.n_rbf)[None]) ** 2))
+    for layer in params["layers"]:
+        # node-side restriction FIRST (N << E), then the edge gather
+        x_act = x[:, idx_active, :]                          # [N, A, C]
+        src = x_act[senders]                                 # [E, A, C]
+        # edge-frame gate (rotation stand-in, RBF conditioned; module doc)
+        gate = _mlp(rbf.astype(cfg.dtype), layer["rbf_gate"])  # [E, I]
+        src = src * gate[:, idx_active, None]
+        # SO(2) per-|m| block-diagonal channel mix (the eSCN O(L^3) kernel);
+        # m-blocks are contiguous in the active axis -> slices + one concat
+        mixed = []
+        for m, (lo, hi) in enumerate(ranges):
+            sub = src[:, lo:hi, :].reshape(src.shape[0], -1)
+            mixed.append((sub @ layer["so2"][m]).reshape(
+                src.shape[0], hi - lo, c))
+        out = jnp.concatenate(mixed, axis=1)                 # [E, A, C]
+        # graph attention over edges (scalar channel drives the score)
+        scal = out[:, 0, :]
+        qh = x[receivers][:, 0, :] @ layer["attn_q"]         # [E, H]
+        kh = scal @ layer["attn_k"]
+        logits = (qh * kh).sum(-1) / (cfg.n_heads ** 0.5)
+        alpha = segment_softmax(logits.astype(F32), receivers,
+                                n).astype(cfg.dtype)
+        agg = jax.ops.segment_sum(out * alpha[:, None, None], receivers,
+                                  num_segments=n)            # [N, A, C]
+        x = x.at[:, idx_active, :].add(agg)
+        # scalar-channel FFN
+        x = x.at[:, 0, :].add(_mlp(x[:, 0, :], layer["ffn"]))
+    return _mlp(x[:, 0, :], params["head"])
+
+
+# --------------------------------------------------------------------- GAT
+
+
+@dataclass(frozen=True)
+class GATConfig:
+    name: str = "gat-cora"
+    n_layers: int = 2
+    d_hidden: int = 8
+    n_heads: int = 8
+    d_in: int = 1433
+    n_classes: int = 7
+    dtype: Any = F32
+
+
+def gat_init(key, cfg: GATConfig):
+    ks = jax.random.split(key, 2 * cfg.n_layers)
+    layers = []
+    d_in = cfg.d_in
+    for i in range(cfg.n_layers):
+        last = i == cfg.n_layers - 1
+        h = cfg.n_classes if last else cfg.d_hidden
+        heads = 1 if last else cfg.n_heads
+        layers.append({
+            "w": (jax.random.normal(ks[2 * i], (d_in, heads * h), F32)
+                  / d_in ** 0.5).astype(cfg.dtype),
+            "a_src": (jax.random.normal(ks[2 * i + 1], (heads, h), F32) * 0.1
+                      ).astype(cfg.dtype),
+            "a_dst": (jax.random.normal(ks[2 * i + 1], (heads, h), F32) * 0.1
+                      ).astype(cfg.dtype),
+        })
+        d_in = heads * h
+    return {"layers": layers}
+
+
+def gat_forward(params, node_feat, senders, receivers, cfg: GATConfig):
+    n = node_feat.shape[0]
+    x = node_feat.astype(cfg.dtype)
+    for i, l in enumerate(params["layers"]):
+        last = i == len(params["layers"]) - 1
+        heads = 1 if last else cfg.n_heads
+        h = l["w"].shape[1] // heads
+        z = (x @ l["w"]).reshape(n, heads, h)
+        e_src = (z * l["a_src"][None]).sum(-1)   # [N, H]
+        e_dst = (z * l["a_dst"][None]).sum(-1)
+        logits = jax.nn.leaky_relu(e_src[senders] + e_dst[receivers], 0.2)
+        alpha = jax.vmap(lambda lg: segment_softmax(lg, receivers, n),
+                         in_axes=1, out_axes=1)(logits.astype(F32))
+        msg = z[senders] * alpha[..., None].astype(cfg.dtype)
+        agg = jax.ops.segment_sum(msg, receivers, num_segments=n)
+        x = agg.reshape(n, heads * h)
+        if not last:
+            x = jax.nn.elu(x)
+    return x
+
+
+# --------------------------------------------------------------- GraphSAGE
+
+
+@dataclass(frozen=True)
+class SAGEConfig:
+    name: str = "graphsage-reddit"
+    n_layers: int = 2
+    d_hidden: int = 128
+    d_in: int = 602
+    n_classes: int = 41
+    sample_sizes: tuple = (25, 10)
+    dtype: Any = F32
+
+
+def sage_init(key, cfg: SAGEConfig):
+    ks = jax.random.split(key, cfg.n_layers)
+    layers = []
+    d_in = cfg.d_in
+    for i in range(cfg.n_layers):
+        d_out = cfg.n_classes if i == cfg.n_layers - 1 else cfg.d_hidden
+        layers.append({
+            "w_self": (jax.random.normal(ks[i], (d_in, d_out), F32)
+                       / d_in ** 0.5).astype(cfg.dtype),
+            "w_nbr": (jax.random.normal(ks[i], (d_in, d_out), F32)
+                      / d_in ** 0.5).astype(cfg.dtype),
+        })
+        d_in = d_out
+    return {"layers": layers}
+
+
+def sage_forward_full(params, node_feat, senders, receivers, cfg: SAGEConfig):
+    """Full-graph mean-aggregator forward."""
+    n = node_feat.shape[0]
+    x = node_feat.astype(cfg.dtype)
+    ones = jnp.ones((senders.shape[0],), cfg.dtype)
+    deg = jnp.maximum(jax.ops.segment_sum(ones, receivers, num_segments=n), 1.0)
+    for i, l in enumerate(params["layers"]):
+        agg = jax.ops.segment_sum(x[senders], receivers, num_segments=n)
+        agg = agg / deg[:, None]
+        x = x @ l["w_self"] + agg @ l["w_nbr"]
+        if i < len(params["layers"]) - 1:
+            x = jax.nn.relu(x)
+            x = x / jnp.maximum(jnp.linalg.norm(x, axis=-1, keepdims=True), 1e-6)
+    return x
+
+
+def sage_forward_sampled(params, feats, nbr_feats, nbr_mask, cfg: SAGEConfig):
+    """Minibatch forward on sampled neighborhoods.
+
+    feats:     [B, d]            seed features
+    nbr_feats: [B, F1, d] and [B, F1, F2, d] handled via two fixed hops packed
+               as [B, F1, (1+F2), d] by the sampler; here we take the generic
+               [B, F, d] one-hop + [B, F, F2, d] two-hop layout.
+    """
+    x_seed, x_h1, x_h2 = feats, nbr_feats["h1"], nbr_feats["h2"]
+    m1, m2 = nbr_mask["h1"], nbr_mask["h2"]
+    l1, l2 = params["layers"][0], params["layers"][1]
+    # layer-1 on hop-1 nodes: aggregate hop-2
+    agg2 = (x_h2 * m2[..., None]).sum(2) / jnp.maximum(
+        m2.sum(2, keepdims=False)[..., None], 1.0)
+    h1 = jax.nn.relu(x_h1 @ l1["w_self"] + agg2 @ l1["w_nbr"])
+    h1 = h1 / jnp.maximum(jnp.linalg.norm(h1, axis=-1, keepdims=True), 1e-6)
+    # layer-1 on seeds: aggregate hop-1 raw feats
+    agg1 = (x_h1 * m1[..., None]).sum(1) / jnp.maximum(
+        m1.sum(1)[..., None], 1.0)
+    h0 = jax.nn.relu(x_seed @ l1["w_self"] + agg1 @ l1["w_nbr"])
+    h0 = h0 / jnp.maximum(jnp.linalg.norm(h0, axis=-1, keepdims=True), 1e-6)
+    # layer-2 on seeds: aggregate layer-1 hop-1 embeddings
+    aggh = (h1 * m1[..., None]).sum(1) / jnp.maximum(m1.sum(1)[..., None], 1.0)
+    return h0 @ l2["w_self"] + aggh @ l2["w_nbr"]

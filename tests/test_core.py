@@ -1,0 +1,321 @@
+"""System-behaviour tests for the Wharf core: store invariants, MAV, updates,
+search, and the statistical-indistinguishability contract (paper Property 2)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import StreamingGraph, WalkConfig, generate_corpus, pairing
+from repro.core.corpus import generate_walk_matrix, corpus_to_store
+from repro.core.mav import mav_dense, mav_indexed
+from repro.core.update import WalkEngine
+from repro.core.walkers import WalkModel
+from repro.data.streams import rmat_edges
+
+U32 = jnp.uint32
+U64 = jnp.uint64
+
+
+def make_graph(seed=0, n_edges=300, log2_n=6, cap=4096):
+    src, dst = rmat_edges(jax.random.PRNGKey(seed), n_edges, log2_n)
+    return StreamingGraph.from_edges(src, dst, n_vertices=2**log2_n,
+                                     edge_capacity=cap)
+
+
+def make_engine(seed=0, n_w=2, length=8, policy="on-demand", order=1):
+    g = make_graph(seed)
+    model = WalkModel(order=order, p=0.5, q=2.0) if order == 2 else WalkModel()
+    cfg = WalkConfig(n_walks_per_vertex=n_w, length=length, model=model)
+    store = generate_corpus(jax.random.PRNGKey(seed + 1), g, cfg)
+    return WalkEngine(graph=g, store=store, cfg=cfg, merge_policy=policy,
+                      rewalk_capacity=2**6 * n_w)
+
+
+# ------------------------------------------------------------------ graph
+
+
+def test_graph_insert_delete_roundtrip():
+    g = make_graph()
+    n0 = int(g.num_edges)
+    src = jnp.asarray([1, 2, 3], U32)
+    dst = jnp.asarray([60, 61, 62], U32)
+    g2 = g.insert_edges(src, dst)
+    assert int(g2.num_edges) == n0 + 6  # undirected -> 2 directed each
+    assert bool(g2.has_edge(jnp.uint32(60), jnp.uint32(1)))
+    g3 = g2.delete_edges(src, dst)
+    assert int(g3.num_edges) == n0
+    assert not bool(g3.has_edge(jnp.uint32(1), jnp.uint32(60)))
+
+
+def test_graph_offsets_consistent():
+    g = make_graph()
+    offs = np.asarray(g.offsets)
+    assert offs[0] == 0 and offs[-1] == int(g.num_edges)
+    assert (np.diff(offs) >= 0).all()
+    # each live edge's src matches its offset bucket
+    codes = np.asarray(g.codes)[: int(g.num_edges)]
+    srcs = (codes >> np.uint64(32)).astype(np.int64)
+    for v in [0, 1, 5, 63]:
+        seg = srcs[offs[v]:offs[v + 1]]
+        assert (seg == v).all()
+
+
+def test_graph_insert_is_idempotent():
+    g = make_graph()
+    src = jnp.asarray([1], U32)
+    dst = jnp.asarray([60], U32)
+    g2 = g.insert_edges(src, dst)
+    g3 = g2.insert_edges(src, dst)
+    assert int(g3.num_edges) == int(g2.num_edges)
+
+
+# ------------------------------------------------------------------ store
+
+
+def test_store_invariants():
+    eng = make_engine()
+    s = eng.store
+    owner = np.asarray(s.owner)
+    code = np.asarray(s.code)
+    # lexsorted by (owner, code)
+    assert (np.diff(owner.astype(np.int64)) >= 0).all()
+    same_owner = owner[1:] == owner[:-1]
+    assert (code[1:][same_owner] >= code[:-1][same_owner]).all()
+    # offsets consistent
+    offs = np.asarray(s.offsets)
+    assert offs[0] == 0 and offs[-1] == s.size
+    # exactly n_walks * l triplets (slot conservation)
+    assert s.size == s.n_walks * s.length
+    # every walk has exactly l triplets
+    f, _ = pairing.szudzik_unpair(s.code)
+    w = np.asarray(f // np.uint64(s.length))
+    counts = np.bincount(w.astype(np.int64), minlength=s.n_walks)
+    assert (counts == s.length).all()
+
+
+def test_store_vmin_vmax():
+    eng = make_engine()
+    s = eng.store
+    _, vn = pairing.szudzik_unpair(s.code)
+    vn = np.asarray(vn).astype(np.uint32)
+    owner = np.asarray(s.owner)
+    offs = np.asarray(s.offsets)
+    vmin = np.asarray(s.vmin)
+    vmax = np.asarray(s.vmax)
+    for v in range(0, s.n_vertices, 7):
+        seg = vn[offs[v]:offs[v + 1]]
+        if len(seg):
+            assert vmin[v] == seg.min() and vmax[v] == seg.max()
+
+
+def test_find_next_matches_simple_search():
+    eng = make_engine()
+    s = eng.store
+    wm = np.asarray(eng.walk_matrix())
+    rng = np.random.default_rng(0)
+    ws = rng.integers(0, s.n_walks, size=32)
+    ps = rng.integers(0, s.length - 1, size=32)
+    vs = wm[ws, ps]
+    nxt, found = eng.store.find_next(
+        jnp.asarray(vs, U32), jnp.asarray(ws, U32), jnp.asarray(ps, U32))
+    nxt2, found2 = eng.store.find_next_simple(
+        jnp.asarray(vs, U32), jnp.asarray(ws, U32), jnp.asarray(ps, U32))
+    assert bool(found.all()) and bool(found2.all())
+    np.testing.assert_array_equal(np.asarray(nxt), np.asarray(nxt2))
+    np.testing.assert_array_equal(np.asarray(nxt), wm[ws, ps + 1])
+
+
+def test_traverse_reconstructs_corpus():
+    eng = make_engine()
+    wm = np.asarray(eng.walk_matrix())
+    assert wm.shape == (eng.store.n_walks, eng.store.length)
+    # walk starts are w // n_w
+    assert (wm[:, 0] == np.arange(wm.shape[0]) // eng.cfg.n_walks_per_vertex).all()
+
+
+# -------------------------------------------------------------------- MAV
+
+
+def test_mav_dense_vs_indexed():
+    eng = make_engine()
+    isrc, idst = rmat_edges(jax.random.PRNGKey(9), 12, 6)
+    m1 = mav_dense(eng.store, isrc, idst)
+    m2 = mav_indexed(eng.store, isrc, idst)
+    np.testing.assert_array_equal(np.asarray(m1.p_min), np.asarray(m2.p_min))
+    np.testing.assert_array_equal(np.asarray(m1.v_min), np.asarray(m2.v_min))
+
+
+def test_mav_against_bruteforce():
+    eng = make_engine()
+    wm = np.asarray(eng.walk_matrix())
+    isrc, idst = rmat_edges(jax.random.PRNGKey(9), 12, 6)
+    m = mav_dense(eng.store, isrc, idst)
+    touched = set(np.asarray(isrc).tolist()) | set(np.asarray(idst).tolist())
+    p_min = np.asarray(m.p_min)
+    v_min = np.asarray(m.v_min)
+    for w in range(wm.shape[0]):
+        hits = [p for p in range(wm.shape[1]) if wm[w, p] in touched]
+        if hits:
+            assert p_min[w] == hits[0]
+            assert v_min[w] == wm[w, hits[0]]
+        else:
+            assert p_min[w] == eng.store.length
+
+
+# ----------------------------------------------------------------- updates
+
+
+@pytest.mark.parametrize("policy", ["eager", "on-demand"])
+def test_update_keeps_walks_valid(policy):
+    eng = make_engine(policy=policy)
+    key = jax.random.PRNGKey(7)
+    for i in range(4):
+        key, k1, k2 = jax.random.split(key, 3)
+        isrc, idst = rmat_edges(k1, 10, 6)
+        eng.insert_edges(k2, isrc, idst)
+    wm = np.asarray(eng.walk_matrix())
+    g = eng.graph
+    a = wm[:, :-1].reshape(-1)
+    b = wm[:, 1:].reshape(-1)
+    has = np.asarray(g.has_edge(jnp.asarray(a, U32), jnp.asarray(b, U32)))
+    degs = np.asarray(g.degrees())
+    stalled_ok = (a == b) & (degs[a] == 0)  # isolated-vertex self-walks
+    assert ((has) | stalled_ok).all()
+
+
+def test_update_deletion_invalidates_and_repairs():
+    eng = make_engine(policy="eager")
+    wm0 = np.asarray(eng.walk_matrix())
+    g = eng.graph
+    # delete the most used edge in the corpus
+    a = wm0[:, :-1].reshape(-1)
+    b = wm0[:, 1:].reshape(-1)
+    live = a != b
+    pairs, counts = np.unique(
+        np.stack([a[live], b[live]]), axis=1, return_counts=True)
+    s, d = pairs[:, np.argmax(counts)]
+    eng.delete_edges(jax.random.PRNGKey(3),
+                     jnp.asarray([s], U32), jnp.asarray([d], U32))
+    wm = np.asarray(eng.walk_matrix())
+    a = wm[:, :-1].reshape(-1)
+    b = wm[:, 1:].reshape(-1)
+    uses = ((a == s) & (b == d)) | ((a == d) & (b == s))
+    assert not uses.any(), "deleted edge still used by some walk"
+
+
+def test_update_preserves_unaffected_prefixes():
+    eng = make_engine(policy="eager")
+    wm0 = np.asarray(eng.walk_matrix())
+    isrc = jnp.asarray([3], U32)
+    idst = jnp.asarray([60], U32)
+    m = mav_dense(eng.store, isrc, idst)
+    p_min = np.asarray(m.p_min)
+    eng.insert_edges(jax.random.PRNGKey(5), isrc, idst)
+    wm1 = np.asarray(eng.walk_matrix())
+    for w in range(wm0.shape[0]):
+        pm = min(p_min[w], eng.store.length)
+        keep = slice(0, min(pm + 1, eng.store.length))
+        np.testing.assert_array_equal(
+            wm0[w, keep], wm1[w, keep],
+            err_msg=f"walk {w} prefix changed (p_min={pm})")
+
+
+def test_node2vec_update_valid():
+    eng = make_engine(order=2, length=6)
+    key = jax.random.PRNGKey(11)
+    for i in range(2):
+        key, k1, k2 = jax.random.split(key, 3)
+        isrc, idst = rmat_edges(k1, 8, 6)
+        eng.insert_edges(k2, isrc, idst)
+    wm = np.asarray(eng.walk_matrix())
+    g = eng.graph
+    a = wm[:, :-1].reshape(-1)
+    b = wm[:, 1:].reshape(-1)
+    has = np.asarray(g.has_edge(jnp.asarray(a, U32), jnp.asarray(b, U32)))
+    degs = np.asarray(g.degrees())
+    assert (has | ((a == b) & (degs[a] == 0))).all()
+
+
+# --------------------------------------------- statistical indistinguishability
+
+
+def transition_counts(wm, n):
+    a = wm[:, :-1].reshape(-1)
+    b = wm[:, 1:].reshape(-1)
+    m = np.zeros((n, n), np.int64)
+    np.add.at(m, (a, b), 1)
+    return m
+
+
+def test_statistical_indistinguishability():
+    """Property 2: updated corpus ~ from-scratch corpus on the updated graph.
+
+    Compare per-vertex empirical transition distributions (chi-square-style
+    normalized L1) between (a) Wharf-updated walks and (b) fresh walks sampled
+    from scratch on the same updated graph, against the same comparison between
+    two independent from-scratch corpora (null). The Wharf-vs-fresh distance
+    must be within noise of the null distance."""
+    eng = make_engine(seed=2, n_w=6, length=10)
+    key = jax.random.PRNGKey(21)
+    for i in range(3):
+        key, k1, k2 = jax.random.split(key, 3)
+        isrc, idst = rmat_edges(k1, 20, 6)
+        eng.insert_edges(k2, isrc, idst)
+    wm_upd = np.asarray(eng.walk_matrix())
+    n = eng.graph.n_vertices
+    fresh1 = np.asarray(generate_walk_matrix(jax.random.PRNGKey(100), eng.graph,
+                                             eng.cfg))
+    fresh2 = np.asarray(generate_walk_matrix(jax.random.PRNGKey(200), eng.graph,
+                                             eng.cfg))
+    c_upd = transition_counts(wm_upd, n)
+    c_f1 = transition_counts(fresh1, n)
+    c_f2 = transition_counts(fresh2, n)
+
+    def l1(p, q):
+        ps = p / np.maximum(p.sum(axis=1, keepdims=True), 1)
+        qs = q / np.maximum(q.sum(axis=1, keepdims=True), 1)
+        return np.abs(ps - qs).sum()
+
+    null = l1(c_f1, c_f2)
+    got = l1(c_upd, c_f1)
+    assert got < null * 1.35, (got, null)
+
+
+def test_merge_interleave_equals_lexsort():
+    """The O(T) interleave merge (§Perf) must equal the lexsort merge."""
+    from repro.core.update import merge_consolidate, merge_interleave
+    import jax.numpy as jnp
+    eng = make_engine(seed=5)
+    key = jax.random.PRNGKey(41)
+    for i in range(3):
+        key, k1, k2 = jax.random.split(key, 3)
+        isrc, idst = rmat_edges(k1, 10, 6)
+        eng.insert_edges(k2, isrc, idst)
+    owner = jnp.concatenate([eng.store.owner, eng.pending.owner.reshape(-1)])
+    code = jnp.concatenate([eng.store.code, eng.pending.code.reshape(-1)])
+    epoch = jnp.concatenate([eng.store.epoch, eng.pending.epoch.reshape(-1)])
+    ref = merge_consolidate(owner, code, epoch, eng.store)
+    out = merge_interleave(eng.store, eng.pending.owner.reshape(-1),
+                           eng.pending.code.reshape(-1),
+                           eng.pending.epoch.reshape(-1),
+                           eng.pending.slot.reshape(-1))
+    np.testing.assert_array_equal(np.asarray(ref.owner), np.asarray(out.owner))
+    np.testing.assert_array_equal(np.asarray(ref.code), np.asarray(out.code))
+    np.testing.assert_array_equal(np.asarray(ref.offsets),
+                                  np.asarray(out.offsets))
+
+
+def test_merge_policies_equivalent_state():
+    """eager and on-demand merging must converge to the same corpus."""
+    e1 = make_engine(seed=3, policy="eager")
+    e2 = make_engine(seed=3, policy="on-demand")
+    key = jax.random.PRNGKey(31)
+    for i in range(3):
+        key, k1, k2 = jax.random.split(key, 3)
+        isrc, idst = rmat_edges(k1, 10, 6)
+        eng_key = k2  # identical PRNG for both engines
+        e1.insert_edges(eng_key, isrc, idst)
+        e2.insert_edges(eng_key, isrc, idst)
+    np.testing.assert_array_equal(np.asarray(e1.walk_matrix()),
+                                  np.asarray(e2.walk_matrix()))

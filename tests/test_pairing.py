@@ -1,0 +1,122 @@
+"""Property tests for Szudzik pairing (paper §2 Properties 1 + Corollary 1)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import pairing
+
+u32 = st.integers(min_value=0, max_value=2**32 - 1)
+u16 = st.integers(min_value=0, max_value=2**16 - 1)
+
+
+@given(st.lists(st.tuples(u32, u32), min_size=1, max_size=64))
+@settings(max_examples=200, deadline=None)
+def test_roundtrip(pairs):
+    x = jnp.asarray([p[0] for p in pairs], jnp.uint64)
+    y = jnp.asarray([p[1] for p in pairs], jnp.uint64)
+    z = pairing.szudzik_pair(x, y)
+    x2, y2 = pairing.szudzik_unpair(z)
+    np.testing.assert_array_equal(np.asarray(x2), np.asarray(x))
+    np.testing.assert_array_equal(np.asarray(y2), np.asarray(y))
+
+
+@given(u32, u32)
+@settings(max_examples=200, deadline=None)
+def test_matches_formula(x, y):
+    z = int(pairing.szudzik_pair(jnp.uint64(x), jnp.uint64(y)))
+    expected = y * y + x if x < y else x * x + x + y
+    assert z == expected
+
+
+# --- Paper erratum (documented in DESIGN.md): Property 1 / Corollary 1 as
+# *stated* (order by x+y, then x) hold for the CANTOR pairing, not Szudzik
+# (Szudzik orders by max(x, y)). Wharf's FINDNEXT range search only needs the
+# operative enclosure property, which Szudzik satisfies through monotonicity in
+# each argument — tested below. Property 1 itself is tested against Cantor.
+
+
+@given(st.tuples(u16, u16), st.tuples(u16, u16))
+@settings(max_examples=200, deadline=None)
+def test_property1_holds_for_cantor(p1, p2):
+    """(⟨x,y⟩ < ⟨x',y'⟩) <-> (x+y < x'+y') or (x+y = x'+y' and x < x')."""
+    (x, y), (x2, y2) = p1, p2
+    z1 = int(pairing.cantor_pair(jnp.uint64(x), jnp.uint64(y)))
+    z2 = int(pairing.cantor_pair(jnp.uint64(x2), jnp.uint64(y2)))
+    lhs = z1 < z2
+    # Cantor orders by (x+y, y); "x < x2" in the paper's statement corresponds
+    # to its own pairing convention — for Cantor z = s(s+1)/2 + y the minor
+    # tiebreak is y.
+    rhs = (x + y < x2 + y2) or (x + y == x2 + y2 and y < y2)
+    assert lhs == rhs
+
+
+@given(u32, st.tuples(u32, u32))
+@settings(max_examples=200, deadline=None)
+def test_szudzik_monotone_second_arg(f, vs):
+    """Szudzik(f, v) strictly increasing in v — the property FINDNEXT needs."""
+    v1, v2 = sorted(vs)
+    z1 = int(pairing.szudzik_pair(jnp.uint64(f), jnp.uint64(v1)))
+    z2 = int(pairing.szudzik_pair(jnp.uint64(f), jnp.uint64(v2)))
+    assert (z1 < z2) == (v1 < v2) and (z1 == z2) == (v1 == v2)
+
+
+@given(st.tuples(u32, u32), u32)
+@settings(max_examples=200, deadline=None)
+def test_szudzik_monotone_first_arg(fs, v):
+    f1, f2 = sorted(fs)
+    z1 = int(pairing.szudzik_pair(jnp.uint64(f1), jnp.uint64(v)))
+    z2 = int(pairing.szudzik_pair(jnp.uint64(f2), jnp.uint64(v)))
+    assert (z1 < z2) == (f1 < f2) and (z1 == z2) == (f1 == f2)
+
+
+@given(st.lists(st.integers(min_value=0, max_value=2**64 - 1), min_size=1,
+                max_size=128))
+@settings(max_examples=200, deadline=None)
+def test_isqrt_exact(zs):
+    import math
+    z = jnp.asarray(zs, jnp.uint64)
+    r = np.asarray(pairing.isqrt_u64(z), np.uint64)
+    expected = np.asarray([math.isqrt(v) for v in zs], np.uint64)
+    np.testing.assert_array_equal(r, expected)
+
+
+def test_isqrt_edges():
+    vals = [0, 1, 2, 3, 4, 2**32 - 1, 2**32, 2**63, 2**64 - 1,
+            (2**32 - 1) ** 2, (2**32 - 1) ** 2 - 1, (2**32 - 1) ** 2 + 1]
+    import math
+    z = jnp.asarray(vals, jnp.uint64)
+    r = np.asarray(pairing.isqrt_u64(z), np.uint64)
+    expected = np.asarray([math.isqrt(v) for v in vals], np.uint64)
+    np.testing.assert_array_equal(r, expected)
+
+
+@given(u32, st.integers(min_value=1, max_value=200),
+       st.integers(min_value=0, max_value=199))
+@settings(max_examples=200, deadline=None)
+def test_wp_packing_roundtrip(w, length, p):
+    p = p % length
+    f = pairing.pack_wp(jnp.uint64(w), jnp.uint64(p), length)
+    w2, p2 = pairing.unpack_wp(f, length)
+    assert int(w2) == w and int(p2) == p
+
+
+def test_search_range_encloses(paper_example=True):
+    """Every code ⟨f, v⟩ with v in [vmin, vmax] lies inside [lb, ub] (§5.1)."""
+    rng = np.random.default_rng(0)
+    f = rng.integers(0, 2**20, size=100).astype(np.uint64)
+    vs = rng.integers(5, 1000, size=(100, 16)).astype(np.uint64)
+    vmin, vmax = vs.min(axis=1), vs.max(axis=1)
+    lb, ub = pairing.search_range(jnp.asarray(f), jnp.asarray(vmin),
+                                  jnp.asarray(vmax))
+    codes = pairing.szudzik_pair(jnp.asarray(f)[:, None], jnp.asarray(vs))
+    assert bool((codes >= jnp.asarray(lb)[:, None]).all())
+    assert bool((codes <= jnp.asarray(ub)[:, None]).all())
+
+
+def test_split_join_u64():
+    rng = np.random.default_rng(1)
+    z = jnp.asarray(rng.integers(0, 2**63, size=512).astype(np.uint64) * 2 + 1)
+    hi, lo = pairing.split_u64(z)
+    np.testing.assert_array_equal(np.asarray(pairing.join_u64(hi, lo)),
+                                  np.asarray(z))

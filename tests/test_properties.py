@@ -1,0 +1,96 @@
+"""Hypothesis property tests on system invariants (deliverable c):
+StreamingGraph algebra, delta-codec width classes, FINDNEXT totality."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import repro.core  # noqa: F401 (x64)
+from repro.core import StreamingGraph, pairing
+from repro.kernels import ops
+from repro.kernels.delta import CHUNK
+
+U32 = jnp.uint32
+
+edge_lists = st.lists(
+    st.tuples(st.integers(0, 31), st.integers(0, 31)).filter(
+        lambda e: e[0] != e[1]),
+    min_size=1, max_size=24)
+
+
+def _graph(edges):
+    src = jnp.asarray([e[0] for e in edges], U32)
+    dst = jnp.asarray([e[1] for e in edges], U32)
+    return StreamingGraph.from_edges(src, dst, 32, 512), src, dst
+
+
+@given(edge_lists)
+@settings(max_examples=40, deadline=None)
+def test_graph_insert_delete_inverse(edges):
+    """delete(insert(G, E), E) == G for fresh E (set semantics)."""
+    g0 = StreamingGraph.empty(32, 512)
+    g1, src, dst = _graph(edges)
+    g2 = g1.delete_edges(src, dst)
+    assert int(g2.num_edges) == 0
+    np.testing.assert_array_equal(np.asarray(g2.offsets),
+                                  np.asarray(g0.offsets))
+
+
+@given(edge_lists)
+@settings(max_examples=40, deadline=None)
+def test_graph_offsets_partition_edges(edges):
+    """offsets form a valid CSR partition: deg sums to num_edges and every
+    neighbor slot belongs to its claimed source segment."""
+    g, _, _ = _graph(edges)
+    offs = np.asarray(g.offsets)
+    assert offs[-1] == int(g.num_edges)
+    codes = np.asarray(g.codes)[: int(g.num_edges)]
+    srcs = (codes >> np.uint64(32)).astype(np.int64)
+    for v in range(32):
+        seg = srcs[offs[v]:offs[v + 1]]
+        assert (seg == v).all()
+    # sortedness => dedup: codes strictly increasing
+    assert (np.diff(codes.astype(np.uint64)) > 0).all() or len(codes) <= 1
+
+
+@given(edge_lists)
+@settings(max_examples=40, deadline=None)
+def test_graph_has_edge_complete(edges):
+    g, src, dst = _graph(edges)
+    assert bool(g.has_edge(src, dst).all())
+    assert bool(g.has_edge(dst, src).all())  # undirected
+
+
+@given(st.integers(1, 3), st.sampled_from([4, 200, 60_000, 2**20, 2**40]))
+@settings(max_examples=40, deadline=None)
+def test_delta_codec_width_class_roundtrip(n_chunks, scale):
+    rng = np.random.default_rng(scale % 977)
+    base = rng.integers(0, 2**50, size=(n_chunks, 1)).astype(np.uint64)
+    deltas = rng.integers(0, scale, size=(n_chunks, CHUNK)).astype(np.uint64)
+    codes = base + np.cumsum(deltas, axis=1)
+    hi, lo = pairing.split_u64(jnp.asarray(codes))
+    packed, widths, ahi, alo = ops.delta_pack(hi, lo)
+    # width class is minimal for the observed deltas
+    w = np.asarray(widths)
+    dmax = deltas[:, 1:].max(axis=1) if CHUNK > 1 else np.zeros(n_chunks)
+    for i in range(n_chunks):
+        if dmax[i] < 256:
+            assert w[i] == 8
+        elif dmax[i] < 65536:
+            assert w[i] == 16
+    ohi, olo = ops.delta_unpack(packed, widths, ahi, alo, interpret=True)
+    np.testing.assert_array_equal(
+        np.asarray(pairing.join_u64(ohi, olo)), codes)
+
+
+@given(st.integers(0, 2**31), st.integers(0, 2**20),
+       st.integers(1, 100))
+@settings(max_examples=60, deadline=None)
+def test_search_range_encloses_any_code(f, v, spread):
+    """[⟨f,vmin⟩,⟨f,vmax⟩] encloses ⟨f,v'⟩ for every v' in [vmin, vmax]."""
+    vmin, vmax = v, v + spread
+    lb, ub = pairing.search_range(jnp.uint64(f), jnp.uint64(vmin),
+                                  jnp.uint64(vmax))
+    mid = v + spread // 2
+    z = pairing.szudzik_pair(jnp.uint64(f), jnp.uint64(mid))
+    assert int(lb) <= int(z) <= int(ub)

@@ -1,0 +1,69 @@
+"""Walk-query serving layer tests (read-path consistency under updates)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import StreamingGraph, WalkConfig, generate_corpus
+from repro.core.update import WalkEngine
+from repro.data.streams import rmat_edges
+from repro.serve.walk_queries import WalkQueryService
+
+U32 = jnp.uint32
+
+
+def make_service(seed=0):
+    src, dst = rmat_edges(jax.random.PRNGKey(seed), 300, 6)
+    g = StreamingGraph.from_edges(src, dst, 64, 4096)
+    cfg = WalkConfig(n_walks_per_vertex=2, length=8)
+    store = generate_corpus(jax.random.PRNGKey(seed + 1), g, cfg)
+    eng = WalkEngine(graph=g, store=store, cfg=cfg, rewalk_capacity=128)
+    return WalkQueryService(engine=eng)
+
+
+def test_next_vertices_matches_corpus():
+    svc = make_service()
+    walks = np.asarray(svc.engine.walk_matrix())
+    ws = np.asarray([3, 17, 40])
+    ps = np.asarray([0, 2, 5])
+    vs = walks[ws, ps]
+    nxt, found = svc.next_vertices(vs, ws, ps)
+    assert bool(found.all())
+    np.testing.assert_array_equal(np.asarray(nxt), walks[ws, ps + 1])
+
+
+def test_walks_of_is_exact_inverted_index():
+    svc = make_service()
+    walks = np.asarray(svc.engine.walk_matrix())
+    out = np.asarray(svc.walks_of([5, 9], capacity=64))
+    for row, v in zip(out, (5, 9)):
+        got = set(int(w) for w in row if w >= 0)
+        expected = set(np.nonzero((walks == v).any(axis=1))[0].tolist())
+        assert got == expected, (v, got, expected)
+
+
+def test_queries_consistent_across_updates():
+    svc = make_service()
+    isrc, idst = rmat_edges(jax.random.PRNGKey(9), 16, 6)
+    svc.engine.insert_edges(jax.random.PRNGKey(10), isrc, idst)
+    walks = np.asarray(svc.engine.walk_matrix())
+    out = np.asarray(svc.walks_of([int(isrc[0])], capacity=128))[0]
+    got = set(int(w) for w in out if w >= 0)
+    expected = set(np.nonzero((walks == int(isrc[0])).any(axis=1))[0].tolist())
+    assert got == expected
+
+
+def test_neighborhoods_shape():
+    svc = make_service()
+    nb = svc.neighborhoods(jnp.asarray([1, 2, 3], U32), hops=2)
+    assert nb.shape == (3, 2, 3)
+    # hop-0 is the seed itself
+    np.testing.assert_array_equal(np.asarray(nb[:, :, 0]),
+                                  np.asarray([[1, 1], [2, 2], [3, 3]]))
+
+
+def test_ppr_row():
+    svc = make_service()
+    row = svc.ppr_row(7)
+    assert row.shape == (64,)
+    assert float(row.sum()) == float(jnp.asarray(1.0)) or abs(float(row.sum()) - 1.0) < 1e-3
+    assert float(row[7]) > 0  # restart mass at the seed
