@@ -1,14 +1,21 @@
 """Paper Fig. 8 + §7.5: memory footprint of Wharf (FOR-packed) vs II-based vs
 Tree-based; scaling in l and n_w; the difference-encoding ablation; and the
-vertex-id distribution study."""
+vertex-id distribution study.
+
+Footprints use the unified accounting: nbytes_packed delegates to
+kernels/delta.py::packed_nbytes, i.e. the width-quantized ({8,16,32,64})
+representation the deployed kernels actually consume — plus the device
+buffer capacity ([C, WORDS] worst case) for honesty about resident bytes.
+Packed-vs-raw bytes are recorded in BENCH_MEMORY.json.
+"""
 from __future__ import annotations
 
-import numpy as np
 import jax
 import jax.numpy as jnp
 
+from benchmarks import common
 from benchmarks.common import (BenchGraph, build_engines, build_graph, emit,
-                               timeit)
+                               write_json)
 from repro.core import WalkConfig, generate_corpus, pairing
 from repro.kernels.delta import packed_nbytes
 from repro.kernels import ops
@@ -19,16 +26,24 @@ def store_bytes(eng):
 
 
 def run():
-    bg = BenchGraph(log2_n=12, n_edges=36_000)
+    bg = (BenchGraph(log2_n=10, n_edges=9_000) if common.SMOKE
+          else BenchGraph(log2_n=12, n_edges=36_000))
     # -- Fig 8a: footprint across engines
     _, engines = build_engines(bg, WalkConfig(n_walks_per_vertex=2, length=10))
     w = engines["wharf"].store
     emit("fig8a_memory/wharf_packed", 0.0, f"bytes={w.nbytes_packed()}")
+    emit("fig8a_memory/wharf_capacity", 0.0,
+         f"bytes={w.nbytes_packed_capacity()}")
     emit("fig8a_memory/wharf_raw64", 0.0, f"bytes={w.nbytes_uncompressed()}")
     emit("fig8a_memory/ii", 0.0, f"bytes={engines['ii'].nbytes()}")
     emit("fig8a_memory/tree", 0.0, f"bytes={engines['tree'].nbytes()}")
+    fig8a = {"wharf_packed": w.nbytes_packed(),
+             "wharf_capacity": w.nbytes_packed_capacity(),
+             "wharf_raw64": w.nbytes_uncompressed(),
+             "ii": engines["ii"].nbytes(), "tree": engines["tree"].nbytes()}
 
     # -- Fig 8b/8c: vary l and n_w (wharf vs ii)
+    vary = {}
     for length in (5, 10, 20, 40):
         _, e = build_engines(bg, WalkConfig(n_walks_per_vertex=2,
                                             length=length),
@@ -36,6 +51,8 @@ def run():
         emit(f"fig8b_vary_l/l{length}/wharf", 0.0,
              f"bytes={e['wharf'].store.nbytes_packed()}")
         emit(f"fig8b_vary_l/l{length}/ii", 0.0, f"bytes={e['ii'].nbytes()}")
+        vary[f"l{length}"] = {"wharf": e["wharf"].store.nbytes_packed(),
+                              "ii": e["ii"].nbytes()}
     for n_w in (1, 2, 4):
         _, e = build_engines(bg, WalkConfig(n_walks_per_vertex=n_w,
                                             length=10),
@@ -43,6 +60,8 @@ def run():
         emit(f"fig8c_vary_nw/nw{n_w}/wharf", 0.0,
              f"bytes={e['wharf'].store.nbytes_packed()}")
         emit(f"fig8c_vary_nw/nw{n_w}/ii", 0.0, f"bytes={e['ii'].nbytes()}")
+        vary[f"nw{n_w}"] = {"wharf": e["wharf"].store.nbytes_packed(),
+                            "ii": e["ii"].nbytes()}
 
     # -- §7.5 difference-encoding ablation: packed vs unpacked store bytes
     _, e = build_engines(bg, WalkConfig(n_walks_per_vertex=2, length=10),
@@ -55,8 +74,10 @@ def run():
 
     # -- §7.5 vertex-id distribution: clustered vs x20 vs random ids
     cfg = WalkConfig(n_walks_per_vertex=2, length=10)
-    g = build_graph(BenchGraph(log2_n=11, n_edges=20_000))
+    g = build_graph(BenchGraph(log2_n=9 if common.SMOKE else 11,
+                               n_edges=4_000 if common.SMOKE else 20_000))
     base_store = generate_corpus(jax.random.PRNGKey(0), g, cfg)
+    id_dist = {}
     for name, factor in (("clustered", 1), ("x20", 20)):
         # remap vertex ids by multiplying (paper's G2-x20): re-encode codes
         f, v = pairing.szudzik_unpair(base_store.code)
@@ -66,8 +87,21 @@ def run():
         chunks = codes[: (codes.shape[0] // 128) * 128].reshape(-1, 128)
         hi, lo = pairing.split_u64(chunks)
         _, widths, _, _ = ops.delta_pack(hi, lo)
+        id_dist[name] = packed_nbytes(widths)
         emit(f"sec7.5_id_distribution/{name}", 0.0,
              f"packed_bytes={packed_nbytes(widths)}")
+
+    write_json("BENCH_MEMORY.json", {
+        "config": {"log2_n": bg.log2_n, "n_edges": bg.n_edges,
+                   "smoke": common.SMOKE,
+                   "jax_backend": jax.default_backend()},
+        "fig8a_bytes": fig8a,
+        "vary_bytes": vary,
+        "de_ablation": {"packed": st.nbytes_packed(),
+                        "raw": st.nbytes_uncompressed(),
+                        "ratio_raw_over_packed": ratio},
+        "id_distribution_packed_bytes": id_dist,
+    })
 
 
 if __name__ == "__main__":

@@ -5,6 +5,8 @@ prints `name,us_per_call,derived` CSV rows as required by the harness spec.
 """
 from __future__ import annotations
 
+import json
+import os
 import time
 from dataclasses import dataclass
 from typing import Callable, List
@@ -20,11 +22,32 @@ from repro.data.streams import rmat_edges
 
 ROWS: List[str] = []
 
+# quick-mode flag (set by run.py --smoke / the CI smoke job): benches shrink
+# their workloads so the whole module finishes in seconds
+SMOKE = False
+
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
 
 def emit(name: str, us_per_call: float, derived: str = ""):
     row = f"{name},{us_per_call:.1f},{derived}"
     ROWS.append(row)
     print(row, flush=True)
+
+
+def write_json(filename: str, payload: dict):
+    """Record a benchmark's structured results as BENCH_*.json at repo root.
+
+    Smoke runs write to *.smoke.json (gitignored) so the committed full-mode
+    acceptance artifacts are never clobbered by a quick local/CI run."""
+    if SMOKE:
+        stem, ext = os.path.splitext(filename)
+        filename = f"{stem}.smoke{ext}"
+    path = os.path.join(_REPO_ROOT, filename)
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"# wrote {path}", flush=True)
 
 
 def timeit(fn: Callable, repeats: int = 3) -> float:

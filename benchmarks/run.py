@@ -4,11 +4,17 @@ bench_results.csv. `--only <name>` runs a single module."""
 from __future__ import annotations
 
 import argparse
+import os
 import sys
 import time
 import traceback
 
-from benchmarks import common
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for _p in (_ROOT, os.path.join(_ROOT, "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
+
+from benchmarks import common  # noqa: E402
 
 MODULES = [
     "bench_throughput",   # Fig 6 + Fig 7
@@ -23,13 +29,29 @@ MODULES = [
 ]
 
 
+SMOKE_MODULES = ["bench_memory", "bench_search"]
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
     ap.add_argument("--out", default="bench_results.csv")
+    ap.add_argument("--smoke", action="store_true",
+                    help="quick mode: shrunken workloads, core modules only "
+                         "(the CI benchmark smoke job)")
     args = ap.parse_args()
 
-    mods = [m for m in MODULES if args.only is None or m == args.only]
+    if args.smoke:
+        common.SMOKE = True
+    if args.only is not None:
+        # --only selects from the full module list (combined with --smoke it
+        # runs that one module with shrunken workloads)
+        mods = [m for m in MODULES if m == args.only]
+        if not mods:
+            sys.exit(f"unknown benchmark module {args.only!r}; "
+                     f"expected one of {MODULES}")
+    else:
+        mods = SMOKE_MODULES if args.smoke else MODULES
     print("name,us_per_call,derived")
     failures = []
     for name in mods:

@@ -1,0 +1,26 @@
+"""Repo-root pytest bootstrap.
+
+1. Makes `repro` importable without an install or PYTHONPATH=src (the
+   pyproject install is the supported route; this keeps `python -m pytest`
+   working from a bare checkout).
+2. Registers a minimal in-repo `hypothesis` fallback when the real package
+   is absent (tests/_hypothesis_fallback.py) so the property-test modules
+   still collect and run. The real hypothesis, when installed via
+   `pip install -e .[dev]`, always wins.
+"""
+import os
+import sys
+
+_SRC = os.path.join(os.path.dirname(os.path.abspath(__file__)), "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)
+
+try:
+    import hypothesis  # noqa: F401
+except ModuleNotFoundError:
+    _TESTS = os.path.join(os.path.dirname(os.path.abspath(__file__)), "tests")
+    if _TESTS not in sys.path:
+        sys.path.insert(0, _TESTS)
+    from _hypothesis_fallback import install as _install_hypothesis_fallback
+
+    _install_hypothesis_fallback()

@@ -37,7 +37,10 @@ for step in range(5):
 walks = engine.walk_matrix()
 print("walk 7:", walks[7])
 
-# 4. FINDNEXT: the paper's indexed point lookup
+# 4. FINDNEXT: the paper's indexed point lookup, served from the compressed
+# chunks via the backend registry (Pallas kernel on TPU, XLA fallback here)
+from repro.core import packed_store
+print("find_next backend:", packed_store.get_default_backend())
 v, w, p = walks[7][3], jnp.uint32(7), jnp.uint32(3)
 nxt, found = engine.store.find_next(v, w, p)
 print(f"find_next(v={int(v)}, w=7, p=3) -> {int(nxt[0])} "

@@ -24,12 +24,25 @@ class WharfStreamConfig:
     rewalk_capacity: int = 1 << 20     # affected-walk bound per batch
     chunk_b: int = 128
     order: int = 1
+    # FINDNEXT backend registry selection (DESIGN.md §3): "auto" resolves to
+    # the Pallas packed-chunk kernel on TPU with automatic CPU fallback to
+    # the interpreted kernel math; "xla-ref" is the legacy while-loop.
+    find_next_backend: str = "auto"
+    find_next_window: int = 8          # K candidate chunks per query
 
     def walk_config(self) -> WalkConfig:
         return WalkConfig(n_walks_per_vertex=self.n_walks_per_vertex,
                           length=self.length,
                           model=WalkModel(order=self.order),
                           chunk_b=self.chunk_b)
+
+    def select_backend(self) -> str:
+        """Install this config's FINDNEXT backend/window as the process
+        default; returns the concrete backend after hardware resolution."""
+        from repro.core import packed_store
+        packed_store.set_default_backend(self.find_next_backend)
+        packed_store.set_default_window(self.find_next_window)
+        return packed_store.get_default_backend()
 
 
 def _wharf(smoke: bool = False) -> WharfStreamConfig:

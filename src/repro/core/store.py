@@ -5,30 +5,38 @@ Paper structure                      ->  TPU-native structure (this file)
 vertex-tree (outer PAM)              ->  `offsets[n+1]` CSR over owner vertex
 walk-tree of v (inner C-tree)        ->  segment [offsets[v], offsets[v+1]) of the
                                          (owner, code)-lexsorted flat code array
-C-tree chunks (size ~b) + heads      ->  fixed b-wide chunks; `chunk_first/last`
+C-tree chunks (size b=128) + heads   ->  device-resident FOR bit-packed chunks
+                                         (`packed/widths`); `anchors_*/last_*`
                                          head arrays (O(1) c_first/c_last, §5.2)
 per-walk-tree {v_min, v_max}         ->  `vmin/vmax[n]` (search bounds, §5.1)
 walk-tree *versions* (on-demand      ->  `epoch[T]` stamps + dense `slot_epoch`
 merge, §6.2/App. A)                      (latest version per corpus slot)
 variable-byte difference encoding    ->  frame-of-reference bit-packing (§4.4;
-                                         branch-free decode — see pack_chunks)
+                                         branch-free decode — kernels/delta.py)
+
+The compressed chunks are the query-path source of truth: FINDNEXT routes
+through the packed-chunk backend registry (core/packed_store.py; Pallas kernel
+on TPU, XLA-interpreted kernel math on CPU, the legacy scalar while-loop as
+the "xla-ref" reference backend). The uncompressed `owner/code/epoch` arrays
+remain resident for the update path (MAV gathers, merges) and for the
+slot-epoch liveness verification of mid-update reads.
 
 Invariant: for a graph with `n_cap` addressable vertices the corpus holds exactly
 T = n_cap * n_w * l triplets — re-walks replace slots one-for-one, so every array
 is static-shaped. Snapshots (paper's PF-tree motivation) are free: JAX arrays are
-immutable, any reference is a serializable snapshot.
+immutable, any reference is a serializable snapshot (DESIGN.md §2).
 """
 from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass
-from typing import Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.core import pairing
+from repro.core import packed_store, pairing
+from repro.core.packed_store import CHUNK, PackedWalkStore
 from repro.core.utils import seg_searchsorted
 
 U64 = jnp.uint64
@@ -47,8 +55,12 @@ class WalkStore:
     offsets: jax.Array      # int32[n+1] per-vertex segment bounds
     vmin: jax.Array         # uint32[n] min next-vertex id per vertex (paper §5.1)
     vmax: jax.Array         # uint32[n]
-    chunk_first: jax.Array  # uint64[C] head metadata (paper §5.2)
-    chunk_last: jax.Array   # uint64[C]
+    packed: jax.Array       # uint32[C, WORDS] FOR bit-packed chunks (§4.4)
+    widths: jax.Array       # uint32[C] per-chunk width class {8,16,32,64}
+    anchors_hi: jax.Array   # uint32[C] chunk head code as (hi, lo) (§5.2)
+    anchors_lo: jax.Array
+    last_hi: jax.Array      # uint32[C] chunk tail code as (hi, lo)
+    last_lo: jax.Array
     slot_epoch: jax.Array   # uint32[n_walks * l] latest version per corpus slot
     length: int = dataclasses.field(metadata=dict(static=True))
     n_walks: int = dataclasses.field(metadata=dict(static=True))
@@ -71,10 +83,19 @@ class WalkStore:
 
     @staticmethod
     def from_sorted(owner, code, epoch, slot_epoch, length: int,
-                    n_walks: int, n_vertices: int,
-                    chunk_b: int = 128) -> "WalkStore":
+                    n_walks: int, n_vertices: int, chunk_b: int = 128,
+                    prev: Optional["WalkStore"] = None) -> "WalkStore":
         """Derive metadata from an ALREADY (owner, code)-sorted stream
-        (used by the O(T) interleave merge — §Perf)."""
+        (used by the O(T) interleave merge — §Perf).
+
+        `prev`: the pre-merge store. When given (and shape-compatible), only
+        chunks whose codes were dirtied by the merge are re-encoded; clean
+        chunks keep their previous packed rows bit-identically (the
+        dirty-chunk invariant, tests/test_packed_store.py). The per-chunk
+        encode is data-parallel jnp, so under XLA's static shapes the select
+        is how "encode only dirty chunks" is expressed; the mask also feeds
+        incremental checkpoint/shard-diff accounting.
+        """
         offsets = jnp.searchsorted(
             owner, jnp.arange(n_vertices + 1, dtype=U32), side="left"
         ).astype(I32)
@@ -84,29 +105,61 @@ class WalkStore:
                                    num_segments=n_vertices)
         vmax = jax.ops.segment_max(v_next32, owner.astype(I32),
                                    num_segments=n_vertices)
-        chunk_first, chunk_last = _chunk_heads(code, chunk_b)
+        packed, widths, a_hi, a_lo, l_hi, l_lo = \
+            packed_store.encode_codes(code)
+        if prev is not None and prev.code.shape == code.shape \
+                and prev.packed.shape == packed.shape:
+            dirty = jnp.any(packed_store.pad_chunk_codes(prev.code)
+                            != packed_store.pad_chunk_codes(code), axis=1)
+            packed = jnp.where(dirty[:, None], packed, prev.packed)
+            widths = jnp.where(dirty, widths, prev.widths)
+            a_hi = jnp.where(dirty, a_hi, prev.anchors_hi)
+            a_lo = jnp.where(dirty, a_lo, prev.anchors_lo)
+            l_hi = jnp.where(dirty, l_hi, prev.last_hi)
+            l_lo = jnp.where(dirty, l_lo, prev.last_lo)
         return WalkStore(owner, code, epoch, offsets, vmin, vmax,
-                         chunk_first, chunk_last, slot_epoch,
+                         packed, widths, a_hi, a_lo, l_hi, l_lo, slot_epoch,
                          length, n_walks, n_vertices, chunk_b)
 
     @property
     def size(self) -> int:
         return self.code.shape[0]
 
+    @property
+    def n_chunks(self) -> int:
+        return self.packed.shape[0]
+
+    def packed_view(self) -> PackedWalkStore:
+        """The standalone compressed abstraction (shares device arrays)."""
+        return PackedWalkStore(self.packed, self.widths, self.anchors_hi,
+                               self.anchors_lo, self.last_hi, self.last_lo,
+                               self.offsets, self.vmin, self.vmax,
+                               self.length, self.n_vertices)
+
     # ------------------------------------------------------------- traversal
 
-    def find_next(self, v, w, p):
+    def find_next(self, v, w, p, backend: Optional[str] = None,
+                  window: Optional[int] = None):
         """FINDNEXT (paper Alg. 1), batched over query arrays.
 
         Returns (v_next uint32, found bool). Implements the §5.1 pruned range
-        search: candidates limited to [lb, ub] = [<f, vmin[v]>, <f, vmax[v]>]
-        within v's segment; each candidate in the range is decoded and tested
-        (the output-sensitive `k` term of §5.3). Liveness is enforced via the
-        slot-epoch check so stale pre-merge versions are skipped.
+        search — candidates limited to [lb, ub] = [<f, vmin[v]>, <f, vmax[v]>]
+        within v's segment — routed through the packed-chunk backend registry
+        (module docstring). Exactness is never sacrificed: lanes whose
+        candidate range exceeds the backend's static cap fall back to the
+        reference scan, and every packed hit is verified against the
+        authoritative code/epoch arrays, which restores the slot-epoch
+        liveness check so stale pre-merge versions are skipped exactly as
+        in "xla-ref". `window` (chunks per query) applies to the
+        pallas/pallas-interpret kernels only; the "interpret" backend uses
+        a fixed 2-chunk window with a MAX_CANDIDATES output-sensitive cap.
         """
-        v = jnp.asarray(v, U32)
-        w64 = jnp.asarray(w, U64)
-        p64 = jnp.asarray(p, U64)
+        backend = packed_store.resolve_backend(backend)
+        if self.n_walks * self.length > 0xFFFFFFFF:
+            backend = "xla-ref"  # kernel f-match is u32; huge corpora scan
+        v = jnp.atleast_1d(jnp.asarray(v, U32))
+        w64 = jnp.atleast_1d(jnp.asarray(w, U64))
+        p64 = jnp.atleast_1d(jnp.asarray(p, U64))
         f = pairing.pack_wp(w64, p64, self.length)
         lb, ub = pairing.search_range(f, self.vmin[v], self.vmax[v])
         seg_lo = self.offsets[v]
@@ -115,6 +168,58 @@ class WalkStore:
         hi = seg_searchsorted(self.code, seg_lo, seg_hi, ub, side="right")
         slot = (w64 * jnp.asarray(self.length, U64) + p64).astype(I32)
         want_epoch = self.slot_epoch[slot]
+
+        if backend == "xla-ref":
+            return self._scan_ref(lo, hi, f, want_epoch)
+
+        c0 = lo // CHUNK
+        if backend == "interpret":
+            # output-sensitive XLA interpretation: decode a 2-chunk window
+            # (always covers MAX_CANDIDATES < CHUNK positions from lo) with
+            # branch-free bit ops, then unpair only the <= MAX_CANDIDATES
+            # codes inside [lo, hi) — the paper's §5.3 k term
+            wmax = packed_store.MAX_CANDIDATES
+            cidx = jnp.clip(c0[:, None] + jnp.arange(2, dtype=I32)[None],
+                            0, self.n_chunks - 1)
+            cand = packed_store.packed_candidates(
+                self.packed, self.widths, self.anchors_hi, self.anchors_lo,
+                cidx, lo, wmax)
+            cf, cv = pairing.szudzik_unpair(cand.reshape(-1))
+            cf = cf.reshape(cand.shape)
+            cv = cv.reshape(cand.shape)
+            in_rng = jnp.arange(wmax, dtype=I32)[None] < (hi - lo)[:, None]
+            hit = in_rng & (cf == f[:, None])
+            f_k = jnp.any(hit, axis=1)
+            v_k = jnp.max(jnp.where(hit, cv, jnp.zeros_like(cv)),
+                          axis=1).astype(U32)
+            over = (hi - lo) > wmax
+        else:  # "pallas" / "pallas-interpret": the packed-chunk kernel
+            k = window or packed_store.get_default_window()
+            c1 = jnp.maximum(hi - 1, lo) // CHUNK
+            cidx = jnp.clip(c0[:, None] + jnp.arange(k, dtype=I32)[None],
+                            0, self.n_chunks - 1)
+            v_k, f_k = packed_store.packed_search(
+                self.packed, self.widths, self.anchors_hi, self.anchors_lo,
+                cidx, f, backend)
+            over = (hi > lo) & ((c1 - c0) >= k)
+        # verification against the authoritative arrays: the hit must sit in
+        # v's segment AND carry the slot's live epoch (mid-update liveness)
+        tgt = pairing.szudzik_pair(f, v_k.astype(U64))
+        pos = seg_searchsorted(self.code, seg_lo, seg_hi, tgt, side="left")
+        pc = jnp.clip(pos, 0, self.size - 1)
+        ok = (pos < seg_hi) & (self.code[pc] == tgt) \
+            & (self.epoch[pc] == want_epoch)
+        found = f_k & ok
+        out = jnp.where(found, v_k, jnp.zeros_like(v_k))
+        # lanes whose candidate window exceeds the static caps: ref fallback
+        o_out, o_found = self._scan_ref(jnp.where(over, lo, hi), hi, f,
+                                        want_epoch)
+        return (jnp.where(over, o_out, out).astype(U32),
+                jnp.where(over, o_found, found))
+
+    def _scan_ref(self, lo, hi, f, want_epoch):
+        """The "xla-ref" backend: scalar while-loop over the uncompressed
+        codes (the seed's original FINDNEXT; reference semantics)."""
 
         def scan_one(lo1, hi1, f1, we1):
             def cond(state):
@@ -162,13 +267,16 @@ class WalkStore:
             jnp.atleast_1d(f), jnp.atleast_1d(want_epoch))
         return out, found
 
-    def traverse(self, w, start_vertex, upto: int):
+    def traverse(self, w, start_vertex, upto: int,
+                 backend: Optional[str] = None):
         """Reconstruct walk w's vertices [0..upto] by repeated FINDNEXT."""
+        backend = packed_store.resolve_backend(backend)
         w = jnp.atleast_1d(jnp.asarray(w, U32))
         cur = jnp.atleast_1d(jnp.asarray(start_vertex, U32))
 
         def step(cur, p):
-            nxt, found = self.find_next(cur, w, jnp.full_like(w, p))
+            nxt, found = self.find_next(cur, w, jnp.full_like(w, p),
+                                        backend=backend)
             nxt = jnp.where(found, nxt, cur)
             return nxt, cur
 
@@ -181,49 +289,15 @@ class WalkStore:
         """Tree-based-equivalent footprint: raw codes + index metadata."""
         return int(self.owner.nbytes + self.code.nbytes + self.epoch.nbytes
                    + self.offsets.nbytes + self.vmin.nbytes + self.vmax.nbytes
-                   + self.chunk_first.nbytes + self.chunk_last.nbytes)
-
-    def packed_rep(self):
-        """Frame-of-reference bit-packed chunks (paper §4.4 adapted; host-side).
-
-        Returns (anchors u64[C], widths u8[C], words u32[total]) and is the
-        representation whose size the memory benchmarks report. Variable-byte is
-        byte-serial; FOR packing keeps the same delta-compression win with a
-        branch-free vectorized decode (see kernels/delta.py).
-        """
-        code = np.asarray(self.code)
-        b = self.chunk_b
-        pad = (-len(code)) % b
-        if pad:
-            code = np.concatenate([code, np.full(pad, code[-1], np.uint64)])
-        chunks = code.reshape(-1, b)
-        anchors = chunks[:, 0].copy()
-        deltas = chunks.astype(np.uint64)
-        deltas[:, 1:] = chunks[:, 1:] - chunks[:, :-1]
-        deltas[:, 0] = 0
-        # NOTE: deltas within a chunk are non-negative (codes sorted within each
-        # owner segment; across segment boundaries owner-major order can break
-        # monotonicity, so those chunks fall back to full width).
-        mono = np.all(chunks[:, 1:] >= chunks[:, :-1], axis=1)
-        maxd = deltas.max(axis=1)
-        widths = np.where(mono, np.ceil(np.log2(maxd.astype(np.float64) + 2)),
-                          64).astype(np.uint8)
-        total_bits = int((widths.astype(np.int64) * (b - 1)).sum())
-        n_words = (total_bits + 31) // 32
-        return anchors, widths, n_words
+                   + self.anchors_hi.nbytes + self.anchors_lo.nbytes
+                   + self.last_hi.nbytes + self.last_lo.nbytes)
 
     def nbytes_packed(self) -> int:
-        anchors, widths, n_words = self.packed_rep()
-        meta = (self.offsets.nbytes + self.vmin.nbytes + self.vmax.nbytes
-                + anchors.nbytes + widths.nbytes
-                + self.chunk_first.nbytes + self.chunk_last.nbytes)
-        return int(n_words * 4 + meta)
+        """Deployed compressed footprint — delegates to the packed view,
+        which counts the words the kernels actually consume
+        (kernels/delta.py::packed_nbytes) plus serving metadata."""
+        return self.packed_view().nbytes()
 
-
-def _chunk_heads(code, b: int) -> Tuple[jax.Array, jax.Array]:
-    t = code.shape[0]
-    n_chunks = max(1, -(-t // b))
-    pad = n_chunks * b - t
-    padded = jnp.concatenate([code, jnp.full((pad,), code[-1], U64)]) if pad else code
-    chunks = padded.reshape(n_chunks, b)
-    return chunks[:, 0], chunks[:, -1]
+    def nbytes_packed_capacity(self) -> int:
+        """Device-resident packed buffer bytes (worst-case [C, WORDS] cap)."""
+        return self.packed_view().nbytes_capacity()

@@ -394,9 +394,11 @@ def merge_interleave(base: WalkStore, acc_owner, acc_code, acc_epoch,
     owner_out = owner_out.at[oa].set(acc_owner, mode="drop")
     code_out = code_out.at[oa].set(acc_code, mode="drop")
     epoch_out = epoch_out.at[oa].set(acc_epoch, mode="drop")
+    # dirty-chunk re-encode: prev=base keeps packed rows of chunks the
+    # accumulator never touched bit-identical (no full-corpus round-trip)
     return WalkStore.from_sorted(owner_out, code_out, epoch_out,
                                  base.slot_epoch, length, n_walks,
-                                 base.n_vertices, base.chunk_b)
+                                 base.n_vertices, base.chunk_b, prev=base)
 
 
 def merge_consolidate(owner, code, epoch, base: WalkStore) -> WalkStore:
@@ -415,5 +417,8 @@ def merge_consolidate(owner, code, epoch, base: WalkStore) -> WalkStore:
     owner = owner[order][:t]
     code = code[order][:t]
     epoch = epoch[order][:t]
-    return WalkStore.build(owner, code, epoch, base.slot_epoch, base.length,
-                           base.n_walks, base.n_vertices, chunk_b=base.chunk_b)
+    # the first t rows are the live set sorted by (owner, code) -> from_sorted
+    # directly; prev=base re-encodes only the chunks the merge dirtied
+    return WalkStore.from_sorted(owner, code, epoch, base.slot_epoch,
+                                 base.length, base.n_walks, base.n_vertices,
+                                 chunk_b=base.chunk_b, prev=base)

@@ -48,7 +48,8 @@ def dict_to_graph(d: Dict[str, Any], n_vertices: int) -> StreamingGraph:
 def store_to_dict(s: WalkStore) -> Dict[str, Any]:
     return {k: getattr(s, k) for k in
             ("owner", "code", "epoch", "offsets", "vmin", "vmax",
-             "chunk_first", "chunk_last", "slot_epoch")}
+             "packed", "widths", "anchors_hi", "anchors_lo",
+             "last_hi", "last_lo", "slot_epoch")}
 
 
 def dict_to_store(d: Dict[str, Any], cfg) -> WalkStore:
@@ -75,8 +76,14 @@ def wharf_shardings(mesh, cfg) -> Tuple[Dict[str, Any], Dict[str, Any]]:
         "offsets": NamedSharding(mesh, P()),
         "vmin": NamedSharding(mesh, P(vtx)),
         "vmax": NamedSharding(mesh, P(vtx)),
-        "chunk_first": NamedSharding(mesh, P(flat)),
-        "chunk_last": NamedSharding(mesh, P(flat)),
+        # device-resident compressed chunks: chunk axis rides the flat
+        # triplet partition (chunks are contiguous code ranges)
+        "packed": NamedSharding(mesh, P(flat, None)),
+        "widths": NamedSharding(mesh, P(flat)),
+        "anchors_hi": NamedSharding(mesh, P(flat)),
+        "anchors_lo": NamedSharding(mesh, P(flat)),
+        "last_hi": NamedSharding(mesh, P(flat)),
+        "last_lo": NamedSharding(mesh, P(flat)),
         "slot_epoch": NamedSharding(mesh, P(flat)),
     }
     return g, s

@@ -59,19 +59,28 @@ def _cumsum64_u32(d):
     return hi, lo
 
 
-def _decode_kernel(packed_ref, width_ref, a_hi_ref, a_lo_ref,
-                   out_hi_ref, out_lo_ref):
-    packed = packed_ref[...]
-    width = width_ref[...]          # [R, 1] u32
+def decode_block(packed, width, a_hi, a_lo):
+    """The chunk-decode math, shared by every consumer (this module's Pallas
+    kernel, range_search's per-chunk decode, and the XLA "interpret"
+    backend in core/packed_store): packed u32 [R, WORDS], width/a_hi/a_lo
+    u32 [R, 1] -> (hi, lo) u32 [R, CHUNK]. Pure jnp — valid both inside and
+    outside kernel bodies."""
     lane = jax.lax.broadcasted_iota(U32, (packed.shape[0], CHUNK), 1)
     v8, v16, v32, raw_hi, raw_lo = _unpack_all_widths(packed, lane)
     d = jnp.where(width == 8, v8, jnp.where(width == 16, v16, v32))
     c_hi, c_lo = _cumsum64_u32(d)
-    hi, lo = _add64(jnp.broadcast_to(a_hi_ref[...], c_hi.shape),
-                    jnp.broadcast_to(a_lo_ref[...], c_lo.shape), c_hi, c_lo)
+    hi, lo = _add64(jnp.broadcast_to(a_hi, c_hi.shape),
+                    jnp.broadcast_to(a_lo, c_lo.shape), c_hi, c_lo)
     is_raw = width == 64
-    out_hi_ref[...] = jnp.where(is_raw, raw_hi, hi)
-    out_lo_ref[...] = jnp.where(is_raw, raw_lo, lo)
+    return jnp.where(is_raw, raw_hi, hi), jnp.where(is_raw, raw_lo, lo)
+
+
+def _decode_kernel(packed_ref, width_ref, a_hi_ref, a_lo_ref,
+                   out_hi_ref, out_lo_ref):
+    hi, lo = decode_block(packed_ref[...], width_ref[...], a_hi_ref[...],
+                          a_lo_ref[...])
+    out_hi_ref[...] = hi
+    out_lo_ref[...] = lo
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))

@@ -28,22 +28,15 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.delta import CHUNK, WORDS, _cumsum64_u32, _unpack_all_widths
-from repro.kernels.szudzik import _add64, szudzik_unpair_math
+from repro.kernels.delta import WORDS, decode_block
+from repro.kernels.szudzik import szudzik_unpair_math
 
 U32 = jnp.uint32
 
 
 def _decode_one(packed, width, a_hi, a_lo):
     """packed (1, WORDS), width/anchors (1, 1) -> (hi, lo) (1, CHUNK)."""
-    lane = jax.lax.broadcasted_iota(U32, (1, CHUNK), 1)
-    v8, v16, v32, raw_hi, raw_lo = _unpack_all_widths(packed, lane)
-    d = jnp.where(width == 8, v8, jnp.where(width == 16, v16, v32))
-    c_hi, c_lo = _cumsum64_u32(d)
-    hi, lo = _add64(jnp.broadcast_to(a_hi, c_hi.shape),
-                    jnp.broadcast_to(a_lo, c_lo.shape), c_hi, c_lo)
-    is_raw = width == 64
-    return jnp.where(is_raw, raw_hi, hi), jnp.where(is_raw, raw_lo, lo)
+    return decode_block(packed, width, a_hi, a_lo)
 
 
 def _search_kernel(cidx_ref, packed_ref, width_ref, ahi_ref, alo_ref,
@@ -108,7 +101,13 @@ def find_next_packed(packed, widths, anchors_hi, anchors_lo, chunk_idx,
 def candidate_chunks(chunk_first_hi, chunk_first_lo, lb_hi, lb_lo, k: int):
     """XLA-side helper: first chunk whose head could cover lb, plus the next
     k-1 chunks (the §5.1 pruned window). Pure u32 lexicographic searchsorted
-    via a composed u64 key is avoided — two-level search on (hi, lo)."""
+    via a composed u64 key is avoided — two-level search on (hi, lo).
+
+    NOTE: assumes the chunk heads are GLOBALLY sorted by code — true for a
+    single-segment corpus (the kernel micro-benches/tests) but not for the
+    owner-major WalkStore layout, where codes sort only within each vertex
+    segment. The store path (WalkStore.find_next) therefore derives its
+    candidate window from segment-local positions instead."""
     key = (jnp.asarray(chunk_first_hi, jnp.uint64) << jnp.uint64(32)) | \
         jnp.asarray(chunk_first_lo, jnp.uint64)
     q = (jnp.asarray(lb_hi, jnp.uint64) << jnp.uint64(32)) | \

@@ -497,9 +497,16 @@ def _wharf_plan(arch, cfg, info, mesh, shape_name) -> CellPlan:
     """The paper's batch walk-update step, distributed (eager-merge form)."""
     from repro.distr.engine import distributed_update_step, wharf_shardings
 
+    from repro.kernels.delta import CHUNK, WORDS
+
+    if cfg.find_next_backend != "auto":
+        # explicit config choice -> install process-wide; default "auto"
+        # configs leave the registry untouched (no side effect on other
+        # stores living in this process)
+        cfg.select_backend()
     wcfg = cfg.walk_config()
     t = cfg.n_vertices * cfg.n_walks_per_vertex * cfg.length
-    n_chunks = -(-t // cfg.chunk_b)
+    n_chunks = -(-t // CHUNK)  # packed grid is CHUNK-wide (kernel layout)
     batch_e = info["batch_edges"]
     U32, U64 = jnp.uint32, jnp.uint64
 
@@ -512,7 +519,9 @@ def _wharf_plan(arch, cfg, info, mesh, shape_name) -> CellPlan:
         "owner": S((t,), U32), "code": S((t,), U64), "epoch": S((t,), U32),
         "offsets": S((cfg.n_vertices + 1,), I32),
         "vmin": S((cfg.n_vertices,), U32), "vmax": S((cfg.n_vertices,), U32),
-        "chunk_first": S((n_chunks,), U64), "chunk_last": S((n_chunks,), U64),
+        "packed": S((n_chunks, WORDS), U32), "widths": S((n_chunks,), U32),
+        "anchors_hi": S((n_chunks,), U32), "anchors_lo": S((n_chunks,), U32),
+        "last_hi": S((n_chunks,), U32), "last_lo": S((n_chunks,), U32),
         "slot_epoch": S((cfg.n_vertices * cfg.n_walks_per_vertex
                          * cfg.length,), U32),
     }

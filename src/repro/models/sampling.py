@@ -44,14 +44,16 @@ def sample_two_hop(key, graph: StreamingGraph, seeds, f1: int, f2: int):
                       m1[..., None])
 
 
-def walk_based_neighborhood(store, seeds, n_w: int, length: int, hops: int):
+def walk_based_neighborhood(store, seeds, n_w: int, length: int, hops: int,
+                            backend=None):
     """Wharf-powered sampler: the first `hops` steps of each maintained walk
     of a seed vertex form an importance-sampled neighborhood (walks starting
-    at v have ids v*n_w .. v*n_w + n_w - 1 by corpus construction)."""
+    at v have ids v*n_w .. v*n_w + n_w - 1 by corpus construction).
+    `backend` selects the FINDNEXT packed-chunk backend (DESIGN.md §3)."""
     seeds = jnp.asarray(seeds, U32)
     b = seeds.shape[0]
     walk_ids = (seeds[:, None] * n_w + jnp.arange(n_w, dtype=U32)[None])
     flat = walk_ids.reshape(-1)
     start = jnp.repeat(seeds, n_w)
-    paths = store.traverse(flat, start, hops)       # [B*n_w, hops+1]
+    paths = store.traverse(flat, start, hops, backend=backend)  # [B*n_w, hops+1]
     return paths.reshape(b, n_w, hops + 1)

@@ -3,7 +3,14 @@
 The paper's consumers (GRL trainers, PPR scorers, recommenders) read the
 maintained corpus concurrently with updates; snapshots are free because JAX
 arrays are immutable — a served query batch holds the store version it
-started with while the engine keeps updating (the PF-tree property, DESIGN §2).
+started with while the engine keeps updating (the PF-tree property, DESIGN.md
+§2).
+
+All four query kinds consume the device-resident packed-chunk abstraction
+(core/packed_store.py, DESIGN.md §3): point lookups route through the
+FINDNEXT backend registry (Pallas kernel on TPU / interpreted kernel math on
+CPU), and segment reads decode the FOR bit-packed chunks directly instead of
+scanning the uncompressed code array.
 
 Query kinds:
   * next_vertices(v, w, p)  — batched FINDNEXT point lookups
@@ -17,12 +24,12 @@ Query kinds:
 from __future__ import annotations
 
 from dataclasses import dataclass
+from typing import Optional
 
-import jax
 import jax.numpy as jnp
 
-from repro.core import pairing
-from repro.core.corpus import walk_start_vertex
+from repro.core import packed_store, pairing
+from repro.core.packed_store import CHUNK
 from repro.core.ppr import ppr_scores
 from repro.core.store import WalkStore
 from repro.core.update import WalkEngine
@@ -35,6 +42,7 @@ I32 = jnp.int32
 @dataclass
 class WalkQueryService:
     engine: WalkEngine
+    backend: Optional[str] = None  # FINDNEXT backend (None = registry default)
 
     def snapshot(self) -> WalkStore:
         """Consistent read snapshot (merges pending versions once)."""
@@ -45,22 +53,33 @@ class WalkQueryService:
         """Batched FINDNEXT: (v_next uint32[B], found bool[B])."""
         store = self.snapshot()
         return store.find_next(jnp.asarray(v, U32), jnp.asarray(w, U32),
-                               jnp.asarray(p, U32))
+                               jnp.asarray(p, U32), backend=self.backend)
 
     def walks_of(self, vertices, capacity: int):
         """Walk ids visiting each vertex: int32 [B, capacity], -1 padded.
 
-        Reads the vertex's walk-tree segment (offsets) and decodes walk ids
-        from the codes — the indexed access the paper contrasts with II scans.
+        Reads the vertex's walk-tree segment bounds (offsets) and decodes the
+        covering FOR bit-packed chunks — the indexed access the paper
+        contrasts with II scans, served from the compressed representation.
         """
         store = self.snapshot()
+        pv = store.packed_view()
         vertices = jnp.asarray(vertices, I32)
         starts = store.offsets[vertices]
         lens = store.offsets[vertices + 1] - starts
-        idx = starts[:, None] + jnp.arange(capacity, dtype=I32)[None]
+        # chunks covering [start, start + capacity) for every queried vertex
+        kc = -(-capacity // CHUNK) + 1
+        c0 = starts // CHUNK
+        cidx = jnp.clip(c0[:, None] + jnp.arange(kc, dtype=I32)[None],
+                        0, pv.n_chunks - 1)
+        codes = packed_store.gather_decode(
+            pv.packed, pv.widths, pv.anchors_hi, pv.anchors_lo, cidx
+        ).reshape(vertices.shape[0], kc * CHUNK)
+        rel = (starts - c0 * CHUNK)[:, None] + jnp.arange(capacity,
+                                                          dtype=I32)[None]
+        seg_codes = jnp.take_along_axis(codes, rel, axis=1)
         valid = jnp.arange(capacity, dtype=I32)[None] < lens[:, None]
-        codes = store.code[jnp.clip(idx, 0, store.size - 1)]
-        f, _ = pairing.szudzik_unpair(codes)
+        f, _ = pairing.szudzik_unpair(seg_codes)
         w = (f // jnp.uint64(store.length)).astype(I32)
         return jnp.where(valid, w, -1)
 
@@ -69,7 +88,7 @@ class WalkQueryService:
         store = self.snapshot()
         return walk_based_neighborhood(
             store, seeds, self.engine.cfg.n_walks_per_vertex, store.length,
-            hops)
+            hops, backend=self.backend)
 
     def ppr_row(self, v: int, restart_prob: float = 0.2):
         """Personalized PageRank scores of vertex v over all vertices."""

@@ -1,0 +1,164 @@
+"""Minimal hypothesis-compatible fallback used when `hypothesis` is absent.
+
+The repo's property tests only use a small strategy surface (integers, lists,
+tuples, sampled_from, .filter/.map) plus the @given/@settings decorators.
+This module implements that surface with deterministic pseudo-random example
+generation so the tests still exercise their invariants in environments where
+the real hypothesis cannot be installed. It is NOT a replacement: no
+shrinking, no database, no coverage-guided generation. Install the real
+package via `pip install -e .[dev]` whenever possible.
+
+Example counts are capped (REPRO_FALLBACK_MAX_EXAMPLES, default 25) to keep
+the fallback fast; the real hypothesis honors each test's own max_examples.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import os
+import random
+import sys
+import types
+import zlib
+
+_MAX = int(os.environ.get("REPRO_FALLBACK_MAX_EXAMPLES", "25"))
+
+
+class SearchStrategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def filter(self, pred, _tries: int = 1000):
+        def draw(rng):
+            for _ in range(_tries):
+                v = self._draw(rng)
+                if pred(v):
+                    return v
+            raise ValueError("fallback strategy filter exhausted retries")
+
+        return SearchStrategy(draw)
+
+    def map(self, fn):
+        return SearchStrategy(lambda rng: fn(self._draw(rng)))
+
+    def example(self):
+        return self._draw(random.Random(0))
+
+
+def integers(min_value=0, max_value=None):
+    lo = 0 if min_value is None else min_value
+    hi = lo + 1000 if max_value is None else max_value
+    return SearchStrategy(lambda rng: rng.randint(lo, hi))
+
+
+def lists(elements, min_size=0, max_size=None, unique=False):
+    hi = (min_size + 10) if max_size is None else max_size
+
+    def draw(rng):
+        n = rng.randint(min_size, hi)
+        out = []
+        seen = set()
+        tries = 0
+        while len(out) < n and tries < 100 * (n + 1):
+            v = elements._draw(rng)
+            tries += 1
+            if unique:
+                if v in seen:
+                    continue
+                seen.add(v)
+            out.append(v)
+        return out
+
+    return SearchStrategy(draw)
+
+
+def tuples(*strategies):
+    return SearchStrategy(lambda rng: tuple(s._draw(rng) for s in strategies))
+
+
+def sampled_from(seq):
+    seq = list(seq)
+    return SearchStrategy(lambda rng: seq[rng.randrange(len(seq))])
+
+
+def booleans():
+    return SearchStrategy(lambda rng: bool(rng.getrandbits(1)))
+
+
+def just(value):
+    return SearchStrategy(lambda rng: value)
+
+
+def settings(max_examples: int = _MAX, deadline=None, **_kw):
+    """Decorator recording the requested example count (capped)."""
+
+    def deco(fn):
+        fn._fallback_max_examples = min(max_examples, _MAX)
+        return fn
+
+    return deco
+
+
+def given(*strategies):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_fallback_max_examples",
+                        getattr(fn, "_fallback_max_examples", _MAX))
+            seed = zlib.crc32(
+                f"{fn.__module__}.{fn.__qualname__}".encode())
+            rng = random.Random(seed)
+            ran = discarded = 0
+            while ran < n and discarded < 50 * n:
+                drawn = [s._draw(rng) for s in strategies]
+                try:
+                    fn(*args, *drawn, **kwargs)
+                except _Unsatisfied:  # assume() rejected this example
+                    discarded += 1
+                    continue
+                ran += 1
+            if n > 0 and ran == 0:
+                raise AssertionError(
+                    "fallback @given: assume() rejected every generated "
+                    "example — the property was never exercised")
+
+        # pytest must see a no-arg test, not the strategy parameters (it
+        # unwraps __wrapped__ and would demand fixtures for them)
+        wrapper.__dict__.pop("__wrapped__", None)
+        wrapper.__signature__ = inspect.Signature()
+        return wrapper
+
+    return deco
+
+
+class HealthCheck:
+    all = staticmethod(lambda: [])
+    too_slow = "too_slow"
+    data_too_large = "data_too_large"
+
+
+def assume(condition):
+    if not condition:
+        raise _Unsatisfied()
+
+
+class _Unsatisfied(Exception):
+    pass
+
+
+def install():
+    """Register this module as `hypothesis` + `hypothesis.strategies`."""
+    strategies = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "lists", "tuples", "sampled_from", "booleans",
+                 "just", "SearchStrategy"):
+        setattr(strategies, name, globals()[name])
+    mod = types.ModuleType("hypothesis")
+    mod.given = given
+    mod.settings = settings
+    mod.assume = assume
+    mod.HealthCheck = HealthCheck
+    mod.strategies = strategies
+    mod.__is_repro_fallback__ = True
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = strategies
+    return mod

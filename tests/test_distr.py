@@ -52,7 +52,7 @@ def test_distributed_walk_update_equivalence():
         # distributed: 2x4 mesh
         mesh = jax.make_mesh((2, 4), ("data", "model"))
         g_sh, s_sh = wharf_shardings(mesh, cfg)
-        with jax.set_mesh(mesh):
+        with mesh:
             step = jax.jit(
                 lambda gd, sd, a, b, e, k: distributed_update_step(
                     gd, sd, a, b, e, k, cfg),
@@ -89,7 +89,7 @@ def test_multihost_lm_train_step():
             params, opt, gn = adamw_update(g, opt, params, ocfg)
             return params, opt, loss
 
-        with jax.set_mesh(mesh):
+        with mesh:
             f = jax.jit(step, in_shardings=(None, None,
                         NamedSharding(mesh, P("data", None))))
             p2, o2, loss = f(params, opt, toks)
@@ -108,6 +108,7 @@ def test_cross_pod_int8_allreduce():
         import jax, jax.numpy as jnp, numpy as np
         from functools import partial
         from jax.sharding import PartitionSpec as P
+        from jax.experimental.shard_map import shard_map
         from repro.train.compression import (cross_pod_mean_int8,
                                              zeros_error_feedback)
 
@@ -116,7 +117,7 @@ def test_cross_pod_int8_allreduce():
                  / 100.0}
         err = zeros_error_feedback({"w": grads["w"][0]})
 
-        @partial(jax.shard_map, mesh=mesh,
+        @partial(shard_map, mesh=mesh,
                  in_specs=({"w": P("pod", None)}, {"w": P()}),
                  out_specs=({"w": P("pod", None)}, {"w": P("pod", None)}))
         def reduce_fn(g, e):
