@@ -33,11 +33,21 @@ for step in range(5):
     print(f"batch {step}: +200 edges -> {n_affected} affected walks "
           f"({engine.n_pending} pending version blocks)")
 
-# 3. read the corpus (triggers the on-demand merge) and traverse a walk
+# 3. or consume a whole stacked stream in ONE jitted scan (the pipelined
+# driver, DESIGN.md §5): no host round-trip between batches, buffers donated
+from repro.data.streams import edge_batch_stream
+stream_src, stream_dst = edge_batch_stream(jax.random.fold_in(key, 99),
+                                           8, 200, LOG2_N)
+affected = engine.run_stream(jax.random.fold_in(key, 100),
+                             stream_src, stream_dst)
+print(f"run_stream: 8 batches in one scan -> per-batch affected "
+      f"{[int(a) for a in affected]}")
+
+# 4. read the corpus (triggers the on-demand merge) and traverse a walk
 walks = engine.walk_matrix()
 print("walk 7:", walks[7])
 
-# 4. FINDNEXT: the paper's indexed point lookup, served from the compressed
+# 5. FINDNEXT: the paper's indexed point lookup, served from the compressed
 # chunks via the backend registry (Pallas kernel on TPU, XLA fallback here)
 from repro.core import packed_store
 print("find_next backend:", packed_store.get_default_backend())

@@ -24,6 +24,11 @@ class WharfStreamConfig:
     rewalk_capacity: int = 1 << 20     # affected-walk bound per batch
     chunk_b: int = 128
     order: int = 1
+    # scan-pipelined streaming driver (DESIGN.md §5): batches consumed per
+    # jitted `run_stream` scan, and the pending-buffer depth before the
+    # in-scan forced merge
+    stream_batches: int = 8
+    max_pending: int = 8
     # FINDNEXT backend registry selection (DESIGN.md §3): "auto" resolves to
     # the Pallas packed-chunk kernel on TPU with automatic CPU fallback to
     # the interpreted kernel math; "xla-ref" is the legacy while-loop.
@@ -64,6 +69,16 @@ WHARF_SHAPES = {
                                   merge_impl="interleave", do_merge=True),
     "stream_10k_nomerge": dict(kind="walk_update", batch_edges=10_000,
                                merge_impl="interleave", do_merge=False),
+    # scan-pipelined multi-batch driver (DESIGN.md §5): a whole
+    # [n_batches, batch] stream per jitted call, on-demand merges inside
+    # the scan — the streaming-throughput production shape
+    "stream_10k_pipelined": dict(kind="walk_stream", batch_edges=10_000,
+                                 n_batches=8, merge_impl="interleave",
+                                 merge_policy="on-demand"),
+    "stream_10k_pipelined_eager": dict(kind="walk_stream",
+                                       batch_edges=10_000, n_batches=8,
+                                       merge_impl="interleave",
+                                       merge_policy="eager"),
 }
 
 register(ArchSpec(name="wharf-stream", family="wharf", make_config=_wharf,

@@ -20,4 +20,5 @@ from repro.core.pairing import (  # noqa: E402,F401
 )
 from repro.core.graph import StreamingGraph  # noqa: E402,F401
 from repro.core.store import WalkStore  # noqa: E402,F401
+from repro.core.overlay import Overlay  # noqa: E402,F401
 from repro.core.corpus import WalkConfig, generate_corpus, corpus_to_store  # noqa: E402,F401

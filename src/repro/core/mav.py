@@ -82,6 +82,36 @@ def mav_dense(store: WalkStore, ins_src, ins_dst, del_src=None, del_dst=None) ->
                               store.length, store.n_walks)
 
 
+def gather_touched_segments(store: WalkStore, touched_v, capacity: int):
+    """Output-sensitive segment gather (§6.1): compact the touched vertices'
+    walk-tree segments into a static `capacity`-sized buffer.
+
+    Returns (owner, code, epoch, valid, total): gathered entry columns, a
+    per-slot validity mask, and the true number of touched triplets. The
+    caller must treat `total > capacity` as a gather overflow — slots past
+    `capacity` are silently dropped from the gathered view.
+
+    This is the single source of the gather used by both `mav_indexed` and
+    the jitted update path (core/update.py), so the two cannot drift.
+    """
+    n = store.n_vertices
+    seg_len = store.offsets[1:] - store.offsets[:-1]
+    aff_len = jnp.where(touched_v, seg_len, 0)
+    # prefix layout of gathered segments
+    out_start = jnp.concatenate(
+        [jnp.zeros((1,), I32), jnp.cumsum(aff_len).astype(I32)])
+    total = out_start[-1]
+    # for each output slot, which vertex segment does it come from?
+    slot_ids = jnp.arange(capacity, dtype=I32)
+    seg_of = jnp.searchsorted(out_start[1:], slot_ids, side="right").astype(I32)
+    seg_of = jnp.clip(seg_of, 0, n - 1)
+    within = slot_ids - out_start[seg_of]
+    src_idx = jnp.clip(store.offsets[seg_of] + within, 0, store.size - 1)
+    valid = slot_ids < total
+    return (store.owner[src_idx], store.code[src_idx], store.epoch[src_idx],
+            valid, total)
+
+
 def mav_indexed(store: WalkStore, ins_src, ins_dst, del_src=None, del_dst=None,
                 gather_capacity: int | None = None) -> MAV:
     """Output-sensitive MAV: gather only affected vertices' walk-tree segments.
@@ -89,26 +119,11 @@ def mav_indexed(store: WalkStore, ins_src, ins_dst, del_src=None, del_dst=None,
     gather_capacity bounds the total number of gathered triplets (static shape);
     it must be >= sum of affected segment lengths (checked by callers/tests).
     """
-    n = store.n_vertices
     touched_v = _touched_vertices(store, ins_src, ins_dst, del_src, del_dst)
-    seg_len = store.offsets[1:] - store.offsets[:-1]
-    aff_len = jnp.where(touched_v, seg_len, 0)
     if gather_capacity is None:
         gather_capacity = store.size
-    # prefix layout of gathered segments
-    out_start = jnp.concatenate(
-        [jnp.zeros((1,), I32), jnp.cumsum(aff_len).astype(I32)])
-    total = out_start[-1]
-    # for each output slot, which vertex segment does it come from?
-    slot_ids = jnp.arange(gather_capacity, dtype=I32)
-    seg_of = jnp.searchsorted(out_start[1:], slot_ids, side="right").astype(I32)
-    seg_of = jnp.clip(seg_of, 0, n - 1)
-    within = slot_ids - out_start[seg_of]
-    src_idx = jnp.clip(store.offsets[seg_of] + within, 0, store.size - 1)
-    valid = slot_ids < total
-    owner = store.owner[src_idx]
-    code = store.code[src_idx]
-    epoch = store.epoch[src_idx]
+    owner, code, epoch, valid, _ = gather_touched_segments(
+        store, touched_v, gather_capacity)
     touched = touched_v[owner.astype(I32)] & valid
     return _pmin_from_entries(owner, code, epoch, store.slot_epoch, touched,
                               valid, store.length, store.n_walks)

@@ -25,6 +25,13 @@ Invariant: for a graph with `n_cap` addressable vertices the corpus holds exactl
 T = n_cap * n_w * l triplets — re-walks replace slots one-for-one, so every array
 is static-shaped. Snapshots (paper's PF-tree motivation) are free: JAX arrays are
 immutable, any reference is a serializable snapshot (DESIGN.md §2).
+
+Between merges the live corpus is this base store PLUS the engine's pending
+version blocks; `core/overlay.py::Overlay` wraps the pair with the same
+`find_next`/`traverse` signatures (slot-epoch precedence, DESIGN.md §5), so
+readers never force a merge. `find_next` here already implements the base
+half of that contract: entries whose slot was rewritten by a pending version
+fail the `epoch == slot_epoch[slot]` verification and report not-found.
 """
 from __future__ import annotations
 

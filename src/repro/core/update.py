@@ -1,14 +1,27 @@
 """Batch walk update (paper §6.2, Algorithm 2) + merge policies (App. A).
 
-The engine state is the hybrid-tree analogue: a base WalkStore plus a
-fixed-capacity *pending buffer* of version blocks (the paper's walk-tree
-versions — one row per processed edge batch, so shapes stay static and the
-ENTIRE update path is one jitted call: graph merge -> MAV -> re-walk ->
-accumulator append). `merge()` consolidates base + pending, evicting obsolete
-triplets (epoch < slot_epoch[slot]) — the paper's Merge. Policies:
+The engine state is the hybrid-tree analogue, packaged as one functional
+pytree (`EngineState`): a base WalkStore plus a fixed-capacity *pending
+buffer* of version blocks (the paper's walk-tree versions — one row per
+processed edge batch, so shapes stay static), with the epoch counter, the
+pending fill level, and the MAV overflow/affected counters carried as device
+scalars. One update is the pure `stream_step`: graph merge -> MAV -> re-walk
+-> accumulator append (+ policy merges), shared verbatim by three drivers:
+
+  * the legacy per-batch `WalkEngine._update` (one jitted call per batch),
+  * `WalkEngine.run_stream` — a whole [n_batches, batch] edge stream inside
+    ONE jitted `jax.lax.scan`, buffers donated, overflow/affected accumulated
+    on device and checked once at stream end (the throughput path: no host
+    sync or dispatch between batches),
+  * the distributed engine (distr/engine.py), which runs the same step on
+    pjit-sharded dict-of-array state.
+
+`merge()` consolidates base + pending, evicting obsolete triplets
+(epoch < slot_epoch[slot]) — the paper's Merge. Policies:
 
   * eager     — merge after every batch (constant memory, lower throughput)
-  * on-demand — merge when the corpus is read / pending fills (paper default)
+  * on-demand — merge when pending fills; reads stay mergeless via the
+    overlay view (core/overlay.py), the paper default
 
 Statistical indistinguishability (Property 2): each affected walk is re-walked
 from p_min with fresh PRNG draws against the *updated* graph, exactly the
@@ -16,7 +29,8 @@ policy of §6.2; chi-square tests in tests/ verify the contract.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+import dataclasses
+from dataclasses import dataclass
 from functools import partial
 from typing import NamedTuple, Optional
 
@@ -26,7 +40,8 @@ import jax.numpy as jnp
 from repro.core import pairing
 from repro.core.corpus import WalkConfig, walk_start_vertex
 from repro.core.graph import StreamingGraph
-from repro.core.mav import MAV, _pmin_from_wpo
+from repro.core.mav import MAV, _pmin_from_wpo, gather_touched_segments
+from repro.core.overlay import Overlay
 from repro.core.store import WalkStore, PAD_EPOCH
 from repro.core.utils import compact_nonzero
 from repro.core.walkers import sample_next
@@ -56,29 +71,124 @@ class PendingBlocks(NamedTuple):
             epoch=jnp.full((max_pending, entries), PAD_EPOCH, U32),
             slot=jnp.zeros((max_pending, entries), I32))
 
+    @staticmethod
+    def empty_like(p: "PendingBlocks") -> "PendingBlocks":
+        return PendingBlocks(owner=jnp.zeros_like(p.owner),
+                             code=jnp.zeros_like(p.code),
+                             epoch=jnp.full_like(p.epoch, PAD_EPOCH),
+                             slot=jnp.zeros_like(p.slot))
 
-@dataclass
-class WalkEngine:
-    """Stateful wrapper: streaming graph + walk corpus, updated in lockstep."""
+
+@jax.tree_util.register_dataclass
+@dataclass(frozen=True)
+class EngineState:
+    """The walk engine as one functional pytree (device-resident scalars).
+
+    Everything the update loop touches lives here, so a whole stream of
+    batches runs inside a single jitted scan with this as the carry — no
+    host round-trip decides anything mid-stream. `overflow` is the sticky
+    MAV gather-capacity flag (deferred-overflow contract: checked once at
+    stream end, not per batch); `last_affected`/`total_affected` mirror the
+    paper's |MAV| accounting without forcing a sync.
+    """
 
     graph: StreamingGraph
     store: WalkStore
-    cfg: WalkConfig
-    merge_policy: str = "on-demand"  # or "eager"
-    rewalk_capacity: int = 1024      # max affected walks handled per batch
-    max_pending: int = 8             # version blocks before forced merge
-    mav_capacity: Optional[int] = None  # gathered-triplet bound (None = T)
-    merge_impl: str = "interleave"      # "interleave" (O(T)) | "lexsort"
-    pending: Optional[PendingBlocks] = None
-    n_pending: int = 0
-    epoch_counter: int = 0
-    last_affected: int = 0
-    mav_overflowed: bool = False
+    pending: PendingBlocks
+    n_pending: jax.Array       # int32  [] filled pending version blocks
+    epoch: jax.Array           # uint32 [] monotone update-batch counter
+    last_affected: jax.Array   # int32  [] |MAV| of the latest batch
+    total_affected: jax.Array  # int32  [] cumulative |MAV| over all batches
+    overflow: jax.Array        # bool   [] sticky MAV gather overflow flag
 
-    def __post_init__(self):
-        if self.pending is None:
-            self.pending = PendingBlocks.empty(
-                self.max_pending, self.rewalk_capacity * self.cfg.length)
+    def replace(self, **kw) -> "EngineState":
+        return dataclasses.replace(self, **kw)
+
+    @staticmethod
+    def create(graph: StreamingGraph, store: WalkStore, max_pending: int,
+               entries: int, pending: Optional[PendingBlocks] = None,
+               n_pending: int = 0, epoch: int = 0) -> "EngineState":
+        if pending is None:
+            pending = PendingBlocks.empty(max_pending, entries)
+        return EngineState(
+            graph=graph, store=store, pending=pending,
+            n_pending=jnp.asarray(n_pending, I32),
+            epoch=jnp.asarray(epoch, U32),
+            last_affected=jnp.asarray(0, I32),
+            total_affected=jnp.asarray(0, I32),
+            overflow=jnp.asarray(False))
+
+
+class WalkEngine:
+    """Stateful wrapper around `EngineState`: graph + walk corpus in lockstep.
+
+    Host-side mirrors (`n_pending`, `epoch_counter`) track the merge
+    schedule, which is data-independent, so the legacy per-batch API and the
+    read-path caches never force a device sync; `last_affected` /
+    `mav_overflowed` are lazy properties that sync only when accessed.
+    """
+
+    def __init__(self, graph: StreamingGraph = None, store: WalkStore = None,
+                 cfg: WalkConfig = None, merge_policy: str = "on-demand",
+                 rewalk_capacity: int = 1024, max_pending: int = 8,
+                 mav_capacity: Optional[int] = None,
+                 merge_impl: str = "interleave",
+                 pending: Optional[PendingBlocks] = None, n_pending: int = 0):
+        self.cfg = cfg
+        self.merge_policy = merge_policy    # "on-demand" | "eager"
+        self.rewalk_capacity = rewalk_capacity  # max affected walks per batch
+        self.max_pending = max_pending      # version blocks before forced merge
+        self.mav_capacity = mav_capacity    # gathered-triplet bound (None = T)
+        self.merge_impl = merge_impl        # "interleave" (O(T)) | "lexsort"
+        self.state = EngineState.create(graph, store, max_pending,
+                                        rewalk_capacity * cfg.length,
+                                        pending=pending, n_pending=n_pending)
+        self._n_pending_host = int(n_pending)
+        self._epoch_host = 0
+
+    # ----------------------------------------------------- state projections
+
+    @property
+    def graph(self) -> StreamingGraph:
+        return self.state.graph
+
+    @property
+    def store(self) -> WalkStore:
+        return self.state.store
+
+    @property
+    def pending(self) -> PendingBlocks:
+        return self.state.pending
+
+    @property
+    def n_pending(self) -> int:
+        """Filled pending blocks (host mirror — never syncs)."""
+        return self._n_pending_host
+
+    @property
+    def epoch_counter(self) -> int:
+        """Update-batch count (host mirror — never syncs)."""
+        return self._epoch_host
+
+    @property
+    def last_affected(self) -> int:
+        """|MAV| of the latest batch (lazy: syncs on access only)."""
+        return int(self.state.last_affected)
+
+    @property
+    def total_affected(self) -> int:
+        """Cumulative |MAV| over all batches (lazy: syncs on access only)."""
+        return int(self.state.total_affected)
+
+    @property
+    def mav_overflowed(self) -> bool:
+        """Sticky MAV gather-capacity flag (lazy: syncs on access only).
+
+        Deferred-overflow contract: `run_stream` accumulates this on device
+        across the whole stream; correctness requires the caller to size
+        mav_capacity for its stream and check this once at stream end
+        (tests/benchmarks enforce)."""
+        return bool(self.state.overflow)
 
     # ------------------------------------------------------------------ API
 
@@ -93,38 +203,72 @@ class WalkEngine:
 
     def _update(self, key, ins_src, ins_dst, del_src, del_dst):
         """One graph update delta-G -> walk updates (Algorithm 2), fully
-        jitted (fixed shapes via the pending buffer)."""
+        jitted (fixed shapes via the pending buffer). Returns the affected
+        count as a device scalar — no sync on the hot path."""
         e = lambda: jnp.zeros((0,), U32)
         ins_src = e() if ins_src is None else jnp.asarray(ins_src, U32)
         ins_dst = e() if ins_dst is None else jnp.asarray(ins_dst, U32)
         del_src = e() if del_src is None else jnp.asarray(del_src, U32)
         del_dst = e() if del_dst is None else jnp.asarray(del_dst, U32)
 
-        # node2vec prefix traversal needs a consolidated view
-        if self.cfg.model.order == 2 and self.n_pending:
-            self.merge()
-        if self.n_pending == self.max_pending:
+        if self._n_pending_host == self.max_pending:
             self.merge()
 
-        self.epoch_counter += 1
-        mav_cap = self.mav_capacity or self.store.size
-        (self.graph, slot_epoch, self.pending, n_aff, overflow) = _update_jit(
-            self.graph, self.store, self.pending,
-            jnp.asarray(self.n_pending, I32),
+        s = self.state
+        self.state = _update_jit(
+            s.graph, s.store, s.pending, s.n_pending, s.epoch,
+            s.total_affected, s.overflow,
             ins_src, ins_dst, del_src, del_dst, key,
-            jnp.asarray(self.epoch_counter, U32),
-            self.cfg, self.rewalk_capacity, mav_cap)
-        self.store = self.store.replace(slot_epoch=slot_epoch)
-        self.n_pending += 1
-        if bool(overflow):
-            # output-sensitive gather capacity exceeded: correctness requires
-            # the caller to size mav_capacity for its stream (tests enforce)
-            self.mav_overflowed = True
+            self.cfg, self.rewalk_capacity, self._mav_capacity())
+        self._n_pending_host += 1
+        self._epoch_host += 1
 
         if self.merge_policy == "eager":
             self.merge()
-        self.last_affected = int(n_aff)
-        return self.last_affected
+        return self.state.last_affected
+
+    def run_stream(self, key, ins_src, ins_dst, del_src=None, del_dst=None):
+        """Consume a whole [n_batches, batch] edge stream in ONE jitted scan.
+
+        Per scan step: graph merge -> MAV -> rewalk -> accumulator append,
+        with the policy merges (pending-full / eager) folded in as
+        `lax.cond` — the same `stream_step` the per-batch driver runs, so
+        the resulting store is bit-identical (tests/test_stream.py). The
+        carried state is donated: prior references to this engine's buffers
+        (snapshots, overlays) are invalidated — `materialize` a snapshot
+        first if it must outlive the stream.
+
+        `key` is split into one PRNG key per batch. Deletion streams are
+        optional ([n_batches, d]; zero-width allowed). Returns the per-batch
+        affected counts as an int32[n_batches] device array; MAV overflow is
+        accumulated on device and surfaces once via `mav_overflowed`.
+        """
+        ins_src = jnp.asarray(ins_src, U32)
+        ins_dst = jnp.asarray(ins_dst, U32)
+        n_batches = ins_src.shape[0]
+        if del_src is None:
+            del_src = jnp.zeros((n_batches, 0), U32)
+            del_dst = jnp.zeros((n_batches, 0), U32)
+        else:
+            del_src = jnp.asarray(del_src, U32)
+            del_dst = jnp.asarray(del_dst, U32)
+        keys = jax.random.split(key, n_batches)
+
+        self.state, affected = _run_stream_jit(
+            self.state, keys, ins_src, ins_dst, del_src, del_dst,
+            cfg=self.cfg, capacity=self.rewalk_capacity,
+            mav_capacity=self._mav_capacity(), max_pending=self.max_pending,
+            merge_policy=self.merge_policy, merge_impl=self.merge_impl)
+
+        # host mirrors: the merge schedule is data-independent
+        self._n_pending_host = pending_after_stream(
+            self._n_pending_host, n_batches, self.max_pending,
+            self.merge_policy)
+        self._epoch_host += n_batches
+        return affected
+
+    def _mav_capacity(self) -> int:
+        return self.mav_capacity or self.state.store.size
 
     def merge(self):
         """Consolidate pending version blocks into the base store (Merge).
@@ -132,68 +276,60 @@ class WalkEngine:
         merge_impl="interleave" (default): O(T) searchsorted interleave
         (beyond-paper, §Perf); "lexsort": the paper-faithful bulk-sort path.
         Both produce identical stores (tested)."""
-        if not self.n_pending:
+        if not self._n_pending_host:
             return
-        if self.merge_impl == "interleave":
-            self.store = _merge_interleave_jit(self.store, self.pending,
-                                               self.cfg)
-        else:
-            self.store = _merge_jit(self.store, self.pending, self.cfg)
-        self.pending = PendingBlocks.empty(
-            self.max_pending, self.rewalk_capacity * self.cfg.length)
-        self.n_pending = 0
+        self.state = _merge_state_jit(self.state, self.cfg, self.merge_impl)
+        self._n_pending_host = 0
 
     def walk_matrix(self):
-        """Read out the full corpus (triggers on-demand merge)."""
+        """Read out the full corpus (triggers on-demand merge).
+
+        For the mergeless (overlay) read of the same matrix, see
+        serve/walk_queries.WalkQueryService.walk_matrix."""
         self.merge()
-        w = jnp.arange(self.store.n_walks, dtype=U32)
+        store = self.state.store
+        w = jnp.arange(store.n_walks, dtype=U32)
         start = walk_start_vertex(w, self.cfg.n_walks_per_vertex)
-        return self.store.traverse(w, start, self.store.length - 1)
+        return store.traverse(w, start, store.length - 1)
+
+    def overlay(self) -> Overlay:
+        """Mergeless read view over base + pending (valid until the next
+        update donates the pending buffer — serving layers re-build per
+        engine state, see serve/walk_queries.py)."""
+        return Overlay.build(self.state.store, self.state.pending)
 
     # per-batch version-block views (used by benchmarks)
     @property
     def blocks(self):
-        return [PendingBlocks(self.pending.owner[i], self.pending.code[i],
-                              self.pending.epoch[i], self.pending.slot[i])
-                for i in range(self.n_pending)]
+        p = self.state.pending
+        return [PendingBlocks(p.owner[i], p.code[i], p.epoch[i], p.slot[i])
+                for i in range(self._n_pending_host)]
 
 
 # ---------------------------------------------------------------- jitted core
 
 
-@partial(jax.jit, static_argnames=("cfg", "capacity", "mav_capacity"),
-         donate_argnums=(2,))
-def _update_jit(graph: StreamingGraph, store: WalkStore,
-                pending: PendingBlocks, pending_idx, ins_src, ins_dst,
-                del_src, del_dst, key, new_epoch, cfg: WalkConfig,
-                capacity: int, mav_capacity: int):
+def _apply_update(state: EngineState, ins_src, ins_dst, del_src, del_dst,
+                  key, cfg: WalkConfig, capacity: int,
+                  mav_capacity: int) -> EngineState:
+    """One Algorithm-2 update appended as a pending version block (pure)."""
     # 1. apply the graph update (paper: MAV is built while updating)
-    graph = graph.apply_batch(ins_src, ins_dst, del_src, del_dst)
+    graph = state.graph.apply_batch(ins_src, ins_dst, del_src, del_dst)
+    store, pending = state.store, state.pending
+    new_epoch = state.epoch + jnp.asarray(1, U32)
 
     # 2. MAV — output-sensitive (paper §6.1): only the touched vertices'
-    # walk-tree SEGMENTS of the base store are gathered and decoded (via the
-    # hybrid-tree offsets); pending entries carry slots explicitly.
+    # walk-tree SEGMENTS of the base store are gathered and decoded (the
+    # shared core/mav.py segment gather); pending entries carry slots
+    # explicitly, so they join the reduction without a u64 unpair.
     touched_v = jnp.zeros((store.n_vertices,), bool)
     for arr in (ins_src, ins_dst, del_src, del_dst):
         if arr.shape[0] > 0:
             touched_v = touched_v.at[arr.astype(I32)].set(True)
 
-    seg_len = store.offsets[1:] - store.offsets[:-1]
-    aff_len = jnp.where(touched_v, seg_len, 0)
-    out_start = jnp.concatenate(
-        [jnp.zeros((1,), I32), jnp.cumsum(aff_len).astype(I32)])
-    total = out_start[-1]
+    g_owner, g_code, g_epoch, g_valid, total = gather_touched_segments(
+        store, touched_v, mav_capacity)
     overflow = total > mav_capacity
-    slot_ids = jnp.arange(mav_capacity, dtype=I32)
-    seg_of = jnp.searchsorted(out_start[1:], slot_ids,
-                              side="right").astype(I32)
-    seg_of = jnp.clip(seg_of, 0, store.n_vertices - 1)
-    within = slot_ids - out_start[seg_of]
-    src_idx = jnp.clip(store.offsets[seg_of] + within, 0, store.size - 1)
-    g_valid = slot_ids < total
-    g_owner = store.owner[src_idx]
-    g_code = store.code[src_idx]
-    g_epoch = store.epoch[src_idx]
     g_f, _ = pairing.szudzik_unpair(jnp.where(g_valid, g_code,
                                               jnp.zeros_like(g_code)))
     g_w = (g_f // jnp.asarray(store.length, U64)).astype(I32)
@@ -217,18 +353,122 @@ def _update_jit(graph: StreamingGraph, store: WalkStore,
         store.length, store.n_walks)
 
     # 3-5. re-walk affected walks into a fresh version block
-    block, slot_epoch, n_aff = _rewalk(key, graph, store, mav, new_epoch,
-                                       cfg, capacity)
+    block, slot_epoch, n_aff = _rewalk(key, graph, store, pending, mav,
+                                       new_epoch, cfg, capacity)
     pending = PendingBlocks(
         owner=jax.lax.dynamic_update_index_in_dim(
-            pending.owner, block.owner, pending_idx, 0),
+            pending.owner, block.owner, state.n_pending, 0),
         code=jax.lax.dynamic_update_index_in_dim(
-            pending.code, block.code, pending_idx, 0),
+            pending.code, block.code, state.n_pending, 0),
         epoch=jax.lax.dynamic_update_index_in_dim(
-            pending.epoch, block.epoch, pending_idx, 0),
+            pending.epoch, block.epoch, state.n_pending, 0),
         slot=jax.lax.dynamic_update_index_in_dim(
-            pending.slot, block.slot, pending_idx, 0))
-    return graph, slot_epoch, pending, n_aff, overflow
+            pending.slot, block.slot, state.n_pending, 0))
+    n_aff = n_aff.astype(I32)
+    return EngineState(
+        graph=graph, store=store.replace(slot_epoch=slot_epoch),
+        pending=pending, n_pending=state.n_pending + 1, epoch=new_epoch,
+        last_affected=n_aff, total_affected=state.total_affected + n_aff,
+        overflow=state.overflow | overflow)
+
+
+def _merged_store(store: WalkStore, pending: PendingBlocks,
+                  merge_impl: str) -> WalkStore:
+    if merge_impl == "interleave":
+        return merge_interleave(store, pending.owner.reshape(-1),
+                                pending.code.reshape(-1),
+                                pending.epoch.reshape(-1),
+                                pending.slot.reshape(-1))
+    owner = jnp.concatenate([store.owner, pending.owner.reshape(-1)])
+    code = jnp.concatenate([store.code, pending.code.reshape(-1)])
+    epoch = jnp.concatenate([store.epoch, pending.epoch.reshape(-1)])
+    return merge_consolidate(owner, code, epoch, store)
+
+
+def _merge_state(state: EngineState, cfg: WalkConfig,
+                 merge_impl: str) -> EngineState:
+    return state.replace(
+        store=_merged_store(state.store, state.pending, merge_impl),
+        pending=PendingBlocks.empty_like(state.pending),
+        n_pending=jnp.asarray(0, I32))
+
+
+_merge_state_jit = jax.jit(_merge_state,
+                           static_argnames=("cfg", "merge_impl"))
+
+
+def pending_after_stream(n_pending: int, n_batches: int, max_pending: int,
+                         merge_policy: str) -> int:
+    """Host-side pending fill level after `n_batches` `stream_step`s.
+
+    The single closed form of stream_step's (data-independent) merge
+    schedule: eager resets after every batch; on-demand merges exactly when
+    the buffer is full at batch entry, then appends — so the fill level
+    cycles with period `max_pending` and never rests at 0 once a batch has
+    run. Keep in lockstep with stream_step's cond/eager logic."""
+    if n_batches <= 0:
+        return n_pending
+    if merge_policy == "eager":
+        return 0
+    return (n_pending + n_batches - 1) % max_pending + 1
+
+
+def stream_step(state: EngineState, key, ins_src, ins_dst, del_src, del_dst,
+                cfg: WalkConfig, capacity: int, mav_capacity: int,
+                max_pending: int, merge_policy: str,
+                merge_impl: str) -> EngineState:
+    """One streaming-pipeline step (pure): policy merges + Algorithm 2.
+
+    THE shared update step — the per-batch driver, the `run_stream` scan,
+    and the distributed engine all run this exact function, which is what
+    makes the three drivers bit-identical on the same key stream."""
+    merge = partial(_merge_state, cfg=cfg, merge_impl=merge_impl)
+    state = jax.lax.cond(state.n_pending >= jnp.asarray(max_pending, I32),
+                         merge, lambda s: s, state)
+    state = _apply_update(state, ins_src, ins_dst, del_src, del_dst, key,
+                          cfg, capacity, mav_capacity)
+    if merge_policy == "eager":
+        state = merge(state)
+    return state
+
+
+@partial(jax.jit, static_argnames=("cfg", "capacity", "mav_capacity"),
+         donate_argnums=(2,))
+def _update_jit(graph, store, pending, n_pending, epoch, total_affected,
+                overflow, ins_src, ins_dst, del_src, del_dst, key,
+                cfg: WalkConfig, capacity: int,
+                mav_capacity: int) -> EngineState:
+    """Per-batch driver entry: donates only the pending buffer, so snapshots
+    of the base store taken between batches stay valid (DESIGN.md §5)."""
+    state = EngineState(graph=graph, store=store, pending=pending,
+                        n_pending=n_pending, epoch=epoch,
+                        last_affected=jnp.asarray(0, I32),
+                        total_affected=total_affected, overflow=overflow)
+    return _apply_update(state, ins_src, ins_dst, del_src, del_dst, key,
+                         cfg, capacity, mav_capacity)
+
+
+@partial(jax.jit,
+         static_argnames=("cfg", "capacity", "mav_capacity", "max_pending",
+                          "merge_policy", "merge_impl"),
+         donate_argnums=(0,))
+def _run_stream_jit(state: EngineState, keys, ins_src, ins_dst, del_src,
+                    del_dst, cfg: WalkConfig, capacity: int,
+                    mav_capacity: int, max_pending: int, merge_policy: str,
+                    merge_impl: str):
+    """The scan-pipelined driver: n_batches updates, zero host round-trips.
+
+    The whole EngineState is donated (in-place buffer reuse across the
+    stream); overflow/affected ride the carry as device scalars."""
+
+    def body(s, xs):
+        k, i_s, i_d, d_s, d_d = xs
+        s = stream_step(s, k, i_s, i_d, d_s, d_d, cfg, capacity,
+                        mav_capacity, max_pending, merge_policy, merge_impl)
+        return s, s.last_affected
+
+    return jax.lax.scan(body, state, (keys, ins_src, ins_dst, del_src,
+                                      del_dst))
 
 
 class VersionBlock(NamedTuple):
@@ -240,7 +480,8 @@ class VersionBlock(NamedTuple):
 
 
 @partial(jax.jit, static_argnames=("cfg", "capacity"))
-def _rewalk(key, graph: StreamingGraph, store: WalkStore, mav: MAV, new_epoch,
+def _rewalk(key, graph: StreamingGraph, store: WalkStore,
+            pending: Optional[PendingBlocks], mav: MAV, new_epoch,
             cfg: WalkConfig, capacity: int):
     """Lines 4-11 of Algorithm 2: sample new walk parts, build accumulator I.
 
@@ -258,8 +499,12 @@ def _rewalk(key, graph: StreamingGraph, store: WalkStore, mav: MAV, new_epoch,
 
     if cfg.model.order == 2:
         start = walk_start_vertex(walk_ids, cfg.n_walks_per_vertex)
-        # O(p_min) FINDNEXTs per walk; paper notes the same requirement
-        prefix = store.traverse(walk_ids, start, length - 1)
+        # O(p_min) FINDNEXTs per walk; paper notes the same requirement.
+        # The prefix must reflect base + pending (earlier version blocks may
+        # have rewritten prefix slots), so it reads through the overlay —
+        # this is what lets node2vec streams run without per-batch merges.
+        view = store if pending is None else Overlay.build(store, pending)
+        prefix = view.traverse(walk_ids, start, length - 1)
         prev0 = prefix[jnp.arange(capacity), jnp.maximum(p_min - 1, 0)]
     else:
         prev0 = v_at_pmin
@@ -309,23 +554,6 @@ def _rewalk(key, graph: StreamingGraph, store: WalkStore, mav: MAV, new_epoch,
     return block, slot_epoch, n_aff
 
 
-@partial(jax.jit, static_argnames=("cfg",))
-def _merge_jit(store: WalkStore, pending: PendingBlocks, cfg: WalkConfig):
-    owner = jnp.concatenate([store.owner, pending.owner.reshape(-1)])
-    code = jnp.concatenate([store.code, pending.code.reshape(-1)])
-    epoch = jnp.concatenate([store.epoch, pending.epoch.reshape(-1)])
-    return merge_consolidate(owner, code, epoch, store)
-
-
-@partial(jax.jit, static_argnames=("cfg",))
-def _merge_interleave_jit(store: WalkStore, pending: PendingBlocks,
-                          cfg: WalkConfig):
-    return merge_interleave(store, pending.owner.reshape(-1),
-                            pending.code.reshape(-1),
-                            pending.epoch.reshape(-1),
-                            pending.slot.reshape(-1))
-
-
 def merge_interleave(base: WalkStore, acc_owner, acc_code, acc_epoch,
                      acc_slot) -> WalkStore:
     """Beyond-paper Merge (§Perf wharf-stream iteration): O(T) interleave
@@ -357,7 +585,6 @@ def merge_interleave(base: WalkStore, acc_owner, acc_code, acc_epoch,
     acc_code = acc_code[order_a]
     acc_epoch = acc_epoch[order_a]
     live_a = live_a[order_a]
-    n_acc = jnp.sum(live_a)
 
     # insertion position of each acc entry in the base (owner segment bounds
     # from the hybrid-tree offsets + in-segment binary search on code)

@@ -80,6 +80,37 @@ def edge_batches(key, n_batches: int, batch_size: int, log2_n: int,
     return [rmat_edges(k, batch_size, log2_n, a, b, c, d) for k in keys]
 
 
+def edge_batch_stream(key, n_batches: int, batch_size: int, log2_n: int,
+                      a=0.5, b=0.1, c=0.1, d=0.3):
+    """Stacked [n_batches, batch_size] R-MAT edge stream.
+
+    The device-resident form `WalkEngine.run_stream` / the distributed scan
+    driver consume: the whole stream is two arrays, so the update pipeline
+    never returns to the host between batches. Batch i equals
+    `rmat_edges(split(key, n)[i], ...)` — the per-batch generators and the
+    stacked generator describe the same stream."""
+    keys = jax.random.split(key, n_batches)
+    return jax.vmap(
+        lambda k: rmat_edges(k, batch_size, log2_n, a, b, c, d))(keys)
+
+
+def mixed_edge_stream(key, n_batches: int, n_ins: int, n_del: int,
+                      log2_n: int, a=0.5, b=0.1, c=0.1, d=0.3):
+    """Stacked insertion + deletion stream (paper Fig. 7 mixed workload).
+
+    Returns (ins_src, ins_dst, del_src, del_dst) with shapes
+    [n_batches, n_ins] / [n_batches, n_del]. Deletions are drawn from the
+    same R-MAT distribution, so most target existing hubs; deleting an
+    absent edge is a graph no-op but still marks its endpoints MAV-touched,
+    matching the per-batch drivers' semantics."""
+    k_ins, k_del = jax.random.split(key)
+    ins_src, ins_dst = edge_batch_stream(k_ins, n_batches, n_ins, log2_n,
+                                         a, b, c, d)
+    del_src, del_dst = edge_batch_stream(k_del, n_batches, max(n_del, 1),
+                                         log2_n, a, b, c, d)
+    return ins_src, ins_dst, del_src[:, :n_del], del_dst[:, :n_del]
+
+
 def token_stream(key, batch: int, seq_len: int, vocab: int):
     """Synthetic LM token batch."""
     return jax.random.randint(key, (batch, seq_len), 0, vocab, dtype=jnp.int32)

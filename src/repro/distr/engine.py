@@ -6,31 +6,31 @@ Sharding layout on the (pod, data, model) production mesh:
     per-vertex walk-trees land whole on a shard)
   * graph edge codes       — sharded the same way (src-major = vertex ranges)
   * per-vertex metadata    — sharded over 'model' (the vertex axis)
-  * rewalk lanes (MAV)     — sharded over ('pod','data') (the walk axis)
+  * rewalk lanes (MAV) / pending accumulator rows — sharded over
+    ('pod','data') (the walk axis)
 
-One distributed update step (eager-merge form, used by the dry-run and the
-multi-pod launcher) = graph merge + MAV + rewalk + merge-consolidate, written
-as pure jnp on dict-of-array state so pjit/GSPMD inserts the collectives:
-sorts become distributed sorts, the frontier gathers become all-gathers over
+The distributed step IS the single-host step: `core.update.stream_step` — the
+same pure function the per-batch driver and `WalkEngine.run_stream` scan run —
+applied to dict-of-array state, so pjit/GSPMD inserts the collectives (sorts
+become distributed sorts, the frontier gathers become all-gathers over
 'model', and the per-walk segment reductions become reduce-scatters over the
-walk axis. The single-host engine (repro.core.update.WalkEngine) remains the
-reference; tests/test_distr.py checks 8-device equivalence.
+walk axis). `distributed_update_step` wraps one batch (the dry-run cell);
+`distributed_run_stream` scans a whole stacked [n_batches, batch] stream on
+device, exactly mirroring the single-host pipelined driver.
+tests/test_distr.py checks 8-device equivalence against the single-host
+engine on the same PRNG stream.
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Any, Dict, Tuple
 
-import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.core import pairing
 from repro.core.graph import StreamingGraph
-from repro.core.mav import _pmin_from_entries
-from repro.core.store import WalkStore, PAD_EPOCH
-from repro.core.update import _rewalk, merge_consolidate, merge_interleave
-from repro.core.mav import MAV
+from repro.core.store import WalkStore
+from repro.core.update import (EngineState, PendingBlocks, _run_stream_jit,
+                               stream_step)
 
 U64 = jnp.uint64
 U32 = jnp.uint32
@@ -89,40 +89,80 @@ def wharf_shardings(mesh, cfg) -> Tuple[Dict[str, Any], Dict[str, Any]]:
     return g, s
 
 
+def stream_shardings(mesh) -> Dict[str, Any]:
+    """Shardings for the streaming inputs of `distributed_run_stream`:
+    batch streams and keys are small and consumed whole per step ->
+    replicate (the heavy state shardings come from `wharf_shardings`)."""
+    r = NamedSharding(mesh, P())
+    return {"keys": r, "ins_src": r, "ins_dst": r}
+
+
+def _init_state(graph_d, store_d, cfg, max_pending: int,
+                epoch0) -> EngineState:
+    graph = dict_to_graph(graph_d, cfg.n_vertices)
+    store = dict_to_store(store_d, cfg)
+    pending = PendingBlocks.empty(max_pending,
+                                  cfg.rewalk_capacity * cfg.length)
+    return EngineState(
+        graph=graph, store=store, pending=pending,
+        n_pending=jnp.asarray(0, I32), epoch=jnp.asarray(epoch0, U32),
+        last_affected=jnp.asarray(0, I32),
+        total_affected=jnp.asarray(0, I32), overflow=jnp.asarray(False))
+
+
 def distributed_update_step(graph_d, store_d, ins_src, ins_dst, new_epoch,
                             key, cfg, merge_impl: str = "interleave",
                             do_merge: bool = True):
     """One edge batch -> updated store (Algorithm 2), pure fn.
 
+    Runs the shared `stream_step` with a one-row pending accumulator:
+    do_merge=True is the eager policy (append + merge, the paper-faithful
+    per-batch form); do_merge=False models the on-demand policy's common
+    (merge-free) batch for amortized accounting — the version block stays in
+    the accumulator and only the slot-epoch bumps reach the returned store.
     merge_impl: "lexsort" = paper-faithful bulk sort; "interleave" = O(T)
-    positional merge (§Perf). do_merge=False models the on-demand policy's
-    common (merge-free) batch for amortized accounting."""
-    graph = dict_to_graph(graph_d, cfg.n_vertices)
+    positional merge (§Perf)."""
+    state = _init_state(graph_d, store_d, cfg, max_pending=1,
+                        epoch0=new_epoch.astype(U32) - jnp.asarray(1, U32))
+    empty = jnp.zeros((0,), U32)
+    state = stream_step(
+        state, key, ins_src, ins_dst, empty, empty, cfg.walk_config(),
+        capacity=cfg.rewalk_capacity, mav_capacity=state.store.size,
+        max_pending=1, merge_policy="eager" if do_merge else "on-demand",
+        merge_impl=merge_impl)
+    return store_to_dict(state.store)
+
+
+def distributed_run_stream(graph_d, store_d, keys, ins_src, ins_dst, cfg,
+                           merge_impl: str = "interleave",
+                           merge_policy: str = "on-demand",
+                           max_pending: int = 8):
+    """A whole [n_batches, batch] insertion stream in one sharded scan.
+
+    The distributed twin of `WalkEngine.run_stream`: same `stream_step`,
+    same donation, overflow/affected accumulated on device. Returns
+    (graph_dict, store_dict, per-batch affected counts) with pending blocks
+    consolidated at stream end so the returned store is self-contained.
+
+    Epochs resume ABOVE the store's highest slot-epoch stamp, so feeding one
+    call's returned store into the next (the launcher's step contract) never
+    reuses an epoch value already live on surviving entries — reuse would
+    let a stale base entry and a fresh pending entry both pass the
+    `epoch == slot_epoch[slot]` liveness check.
+
+    Donation caveat (as for `WalkEngine.run_stream`): invoked eagerly (not
+    under an outer jit) the input dict buffers are donated — other
+    references to the same arrays are invalidated."""
     store = dict_to_store(store_d, cfg)
-    graph = graph.insert_edges(ins_src, ins_dst)
-
-    # MAV (dense over the sharded store: a masked segmented reduction)
-    touched_v = jnp.zeros((cfg.n_vertices,), bool)
-    touched_v = touched_v.at[ins_src.astype(I32)].set(True)
-    touched_v = touched_v.at[ins_dst.astype(I32)].set(True)
-    touched = touched_v[store.owner.astype(I32)]
-    valid = jnp.ones_like(touched)
-    mav = _pmin_from_entries(store.owner, store.code, store.epoch,
-                             store.slot_epoch, touched, valid,
-                             store.length, store.n_walks)
-
-    block, slot_epoch, _ = _rewalk(key, graph, store, mav,
-                                   new_epoch.astype(U32),
-                                   cfg.walk_config(), cfg.rewalk_capacity)
-    store = store.replace(slot_epoch=slot_epoch)
-    if not do_merge:
-        return store_to_dict(store)
-    if merge_impl == "interleave":
-        new_store = merge_interleave(store, block.owner, block.code,
-                                     block.epoch, block.slot)
-    else:
-        owner = jnp.concatenate([store.owner, block.owner])
-        code = jnp.concatenate([store.code, block.code])
-        epoch = jnp.concatenate([store.epoch, block.epoch])
-        new_store = merge_consolidate(owner, code, epoch, store)
-    return store_to_dict(new_store)
+    state = _init_state(graph_d, store_d, cfg, max_pending=max_pending,
+                        epoch0=jnp.max(store.slot_epoch))
+    n_batches = ins_src.shape[0]
+    empty = jnp.zeros((n_batches, 0), U32)
+    state, affected = _run_stream_jit(
+        state, keys, ins_src, ins_dst, empty, empty,
+        cfg=cfg.walk_config(), capacity=cfg.rewalk_capacity,
+        mav_capacity=state.store.size, max_pending=max_pending,
+        merge_policy=merge_policy, merge_impl=merge_impl)
+    from repro.core.update import _merge_state
+    state = _merge_state(state, cfg.walk_config(), merge_impl)
+    return (graph_to_dict(state.graph), store_to_dict(state.store), affected)

@@ -494,8 +494,15 @@ def _dlrm_plan(arch, cfg, info, mesh, shape_name) -> CellPlan:
 
 
 def _wharf_plan(arch, cfg, info, mesh, shape_name) -> CellPlan:
-    """The paper's batch walk-update step, distributed (eager-merge form)."""
-    from repro.distr.engine import distributed_update_step, wharf_shardings
+    """The paper's walk-update step, distributed.
+
+    kind="walk_update": one batch per call (eager/no-merge forms).
+    kind="walk_stream": the scan-pipelined driver — a whole
+    [n_batches, batch] stream per call via the shared `stream_step`
+    (DESIGN.md §5), with in-scan policy merges."""
+    from repro.distr.engine import (distributed_run_stream,
+                                    distributed_update_step,
+                                    stream_shardings, wharf_shardings)
 
     from repro.kernels.delta import CHUNK, WORDS
 
@@ -525,10 +532,34 @@ def _wharf_plan(arch, cfg, info, mesh, shape_name) -> CellPlan:
         "slot_epoch": S((cfg.n_vertices * cfg.n_walks_per_vertex
                          * cfg.length,), U32),
     }
-    args = (graph, store, S((batch_e,), U32), S((batch_e,), U32),
-            S((), U32), S((2,), jnp.uint32))
-
     merge_impl = info.get("merge_impl", "lexsort")  # paper-faithful default
+    g_sh, s_sh = wharf_shardings(mesh, cfg)
+    # useful work: |I| ≈ capacity * l/2 resamples + merge sort of T + |I|
+    import math
+    flops_batch = (cfg.rewalk_capacity * cfg.length * 20.0
+                   + (t + cfg.rewalk_capacity * cfg.length)
+                   * math.log2(max(t, 2)) * 2)
+
+    if info["kind"] == "walk_stream":
+        n_batches = info.get("n_batches", cfg.stream_batches)
+        merge_policy = info.get("merge_policy", "on-demand")
+
+        def stream(graph_d, store_d, keys, ins_src, ins_dst):
+            return distributed_run_stream(
+                graph_d, store_d, keys, ins_src, ins_dst, cfg,
+                merge_impl=merge_impl, merge_policy=merge_policy,
+                max_pending=cfg.max_pending)
+
+        args = (graph, store, S((n_batches, 2), jnp.uint32),
+                S((n_batches, batch_e), U32), S((n_batches, batch_e), U32))
+        st_sh = stream_shardings(mesh)
+        in_sh = (g_sh, s_sh, st_sh["keys"], st_sh["ins_src"],
+                 st_sh["ins_dst"])
+        out_sh = (g_sh, s_sh, NamedSharding(mesh, P()))
+        return CellPlan(arch, shape_name, "walk_stream_step", stream, args,
+                        in_sh, out_sh, flops_batch * n_batches,
+                        donate_argnums=(1,))
+
     do_merge = info.get("do_merge", True)
 
     def step(graph_d, store_d, ins_src, ins_dst, new_epoch, key):
@@ -537,17 +568,13 @@ def _wharf_plan(arch, cfg, info, mesh, shape_name) -> CellPlan:
                                        merge_impl=merge_impl,
                                        do_merge=do_merge)
 
-    g_sh, s_sh = wharf_shardings(mesh, cfg)
+    args = (graph, store, S((batch_e,), U32), S((batch_e,), U32),
+            S((), U32), S((2,), jnp.uint32))
     in_sh = (g_sh, s_sh, NamedSharding(mesh, P()), NamedSharding(mesh, P()),
              NamedSharding(mesh, P()), NamedSharding(mesh, P()))
     out_sh = s_sh
-    # useful work: |I| ≈ capacity * l/2 resamples + merge sort of T + |I|
-    import math
-    flops = (cfg.rewalk_capacity * cfg.length * 20.0
-             + (t + cfg.rewalk_capacity * cfg.length)
-             * math.log2(max(t, 2)) * 2)
     return CellPlan(arch, shape_name, "walk_update_step", step, args, in_sh,
-                    out_sh, flops, donate_argnums=(1,))
+                    out_sh, flops_batch, donate_argnums=(1,))
 
 
 # ------------------------------------------------------------------ public

@@ -72,7 +72,8 @@ def wharf_trainer(arch: str, smoke: bool, batch_edges: int):
     def step_fn(state, batch, key):
         isrc, idst = batch
         n_aff = engine.update_batch(key, isrc, idst, None, None)
-        return {"store_code": engine.store.code}, {"affected_walks": n_aff}
+        # metrics are host-printed anyway; sync the lazy count here
+        return {"store_code": engine.store.code}, {"affected_walks": int(n_aff)}
 
     def batch_fn(step, key):
         return rmat_edges(key, batch_edges, log2n)

@@ -1,16 +1,19 @@
 """Walk-query serving layer: batched read-path over a WalkEngine.
 
 The paper's consumers (GRL trainers, PPR scorers, recommenders) read the
-maintained corpus concurrently with updates; snapshots are free because JAX
-arrays are immutable — a served query batch holds the store version it
-started with while the engine keeps updating (the PF-tree property, DESIGN.md
-§2).
+maintained corpus concurrently with updates. Snapshots are free — the
+PF-tree property, DESIGN.md §2/§5: a snapshot is an `Overlay` over the
+immutable base store plus the pending version blocks, resolved per corpus
+slot by slot-epoch precedence. NO query forces a merge anymore: reads
+between merges return exactly the post-merge answer (tested), and the
+engine's update pipeline keeps streaming while queries are served.
 
 All four query kinds consume the device-resident packed-chunk abstraction
 (core/packed_store.py, DESIGN.md §3): point lookups route through the
 FINDNEXT backend registry (Pallas kernel on TPU / interpreted kernel math on
 CPU), and segment reads decode the FOR bit-packed chunks directly instead of
-scanning the uncompressed code array.
+scanning the uncompressed code array — filtered by the slot-epoch liveness
+stamps so stale pre-merge triplets never surface.
 
 Query kinds:
   * next_vertices(v, w, p)  — batched FINDNEXT point lookups
@@ -20,20 +23,28 @@ Query kinds:
   * neighborhoods(seeds)    — Wharf-walk importance-sampled neighborhoods
                               (feeds GraphSAGE minibatching / Pixie-style recs)
   * ppr_row(v)              — personalized-PageRank scores from the corpus
+                              (walk matrix cached per engine epoch)
+
+Staleness/caching: the overlay is rebuilt only when the engine state object
+changes (updates and merges swap the immutable pytree); the ppr walk matrix
+is cached keyed on the engine's epoch counter — a merge consolidates storage
+without changing corpus contents, so the cache survives merges and is
+invalidated exactly by updates. Neither check syncs the device.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Optional
 
 import jax.numpy as jnp
 
 from repro.core import packed_store, pairing
+from repro.core.corpus import walk_start_vertex
+from repro.core.overlay import Overlay
 from repro.core.packed_store import CHUNK
 from repro.core.ppr import ppr_scores
 from repro.core.store import WalkStore
 from repro.core.update import WalkEngine
-from repro.models.sampling import walk_based_neighborhood
 
 U32 = jnp.uint32
 I32 = jnp.int32
@@ -43,26 +54,47 @@ I32 = jnp.int32
 class WalkQueryService:
     engine: WalkEngine
     backend: Optional[str] = None  # FINDNEXT backend (None = registry default)
+    _overlay_cache: Optional[Overlay] = field(default=None, repr=False)
+    _overlay_state: object = field(default=None, repr=False)
+    _wm_cache: object = field(default=None, repr=False)
+    _wm_epoch: int = field(default=-1, repr=False)
 
-    def snapshot(self) -> WalkStore:
-        """Consistent read snapshot (merges pending versions once)."""
+    def snapshot(self) -> Overlay:
+        """Consistent read snapshot — mergeless and O(|pending|) to build.
+
+        Valid until the engine's next update donates its buffers; use
+        `materialize()` for a snapshot that must outlive further updates."""
+        state = self.engine.state
+        if self._overlay_cache is None or self._overlay_state is not state:
+            self._overlay_cache = Overlay.build(state.store, state.pending)
+            self._overlay_state = state
+        return self._overlay_cache
+
+    def materialize(self) -> WalkStore:
+        """Merged, self-contained store snapshot (forces the on-demand
+        merge once — the pre-overlay `snapshot()` semantics)."""
         self.engine.merge()
         return self.engine.store
 
     def next_vertices(self, v, w, p):
         """Batched FINDNEXT: (v_next uint32[B], found bool[B])."""
-        store = self.snapshot()
-        return store.find_next(jnp.asarray(v, U32), jnp.asarray(w, U32),
-                               jnp.asarray(p, U32), backend=self.backend)
+        return self.snapshot().find_next(
+            jnp.asarray(v, U32), jnp.asarray(w, U32), jnp.asarray(p, U32),
+            backend=self.backend)
 
     def walks_of(self, vertices, capacity: int):
-        """Walk ids visiting each vertex: int32 [B, capacity], -1 padded.
+        """Walk ids visiting each vertex: int32 [B, 2*capacity], -1 padded.
 
         Reads the vertex's walk-tree segment bounds (offsets) and decodes the
         covering FOR bit-packed chunks — the indexed access the paper
         contrasts with II scans, served from the compressed representation.
+        Mergeless: stale base entries (slot rewritten by a pending version)
+        are masked by the slot-epoch liveness check, and the live pending
+        entries of each vertex are appended from the overlay's owner-sorted
+        index, so the union equals the post-merge segment exactly.
         """
-        store = self.snapshot()
+        ov = self.snapshot()
+        store = ov.base
         pv = store.packed_view()
         vertices = jnp.asarray(vertices, I32)
         starts = store.offsets[vertices]
@@ -80,19 +112,47 @@ class WalkQueryService:
         seg_codes = jnp.take_along_axis(codes, rel, axis=1)
         valid = jnp.arange(capacity, dtype=I32)[None] < lens[:, None]
         f, _ = pairing.szudzik_unpair(seg_codes)
+        # slot-epoch liveness: mask base entries superseded by pending blocks
+        abs_idx = jnp.clip(starts[:, None]
+                           + jnp.arange(capacity, dtype=I32)[None],
+                           0, store.size - 1)
+        slot = jnp.clip(f, 0, store.n_walks * store.length - 1).astype(I32)
+        live = store.epoch[abs_idx] == store.slot_epoch[slot]
         w = (f // jnp.uint64(store.length)).astype(I32)
-        return jnp.where(valid, w, -1)
+        base_w = jnp.where(valid & live, w, -1)
+        pend_w = ov.pending_walks_of(vertices, capacity)
+        return jnp.concatenate([base_w, pend_w], axis=1)
 
     def neighborhoods(self, seeds, hops: int = 2):
         """[B, n_w, hops+1] walk-based neighborhoods for the seed vertices."""
-        store = self.snapshot()
+        from repro.models.sampling import walk_based_neighborhood
+        ov = self.snapshot()
         return walk_based_neighborhood(
-            store, seeds, self.engine.cfg.n_walks_per_vertex, store.length,
+            ov, seeds, self.engine.cfg.n_walks_per_vertex, ov.base.length,
             hops, backend=self.backend)
 
+    def walk_matrix(self):
+        """Full [n_walks, l] corpus via overlay traversal — mergeless, and
+        cached keyed on the engine's epoch counter (invalidated by updates,
+        stable across merges)."""
+        epoch = self.engine.epoch_counter
+        if self._wm_cache is None or self._wm_epoch != epoch:
+            ov = self.snapshot()
+            store = ov.base
+            w = jnp.arange(store.n_walks, dtype=U32)
+            start = walk_start_vertex(w, self.engine.cfg.n_walks_per_vertex)
+            self._wm_cache = ov.traverse(w, start, store.length - 1,
+                                         backend=self.backend)
+            self._wm_epoch = epoch
+        return self._wm_cache
+
     def ppr_row(self, v: int, restart_prob: float = 0.2):
-        """Personalized PageRank scores of vertex v over all vertices."""
-        walks = self.engine.walk_matrix()
+        """Personalized PageRank scores of vertex v over all vertices.
+
+        The underlying walk matrix is served from the epoch-keyed cache, so
+        repeated PPR queries between updates cost one O(n) row read instead
+        of a full merge + O(l) corpus traversal per call."""
+        walks = self.walk_matrix()
         scores = ppr_scores(walks, self.engine.store.n_vertices,
                             restart_prob)
         return scores[v]

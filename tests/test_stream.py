@@ -1,0 +1,255 @@
+"""Streaming-pipeline tests (DESIGN.md §5): the scan-pipelined `run_stream`
+driver must be BIT-identical to the per-batch reference driver, and the
+mergeless overlay read path must equal post-merge reads mid-stream."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import StreamingGraph, WalkConfig, generate_corpus
+from repro.core.corpus import walk_start_vertex
+from repro.core.overlay import Overlay
+from repro.core.update import EngineState, WalkEngine
+from repro.core.walkers import WalkModel
+from repro.data.streams import mixed_edge_stream, rmat_edges
+from repro.serve.walk_queries import WalkQueryService
+
+U32 = jnp.uint32
+
+LOG2_N = 6
+N = 2 ** LOG2_N
+
+
+def make_engine(seed=0, n_w=2, length=8, policy="on-demand", order=1,
+                merge_impl="interleave", max_pending=3, mav_capacity=None):
+    src, dst = rmat_edges(jax.random.PRNGKey(seed), 300, LOG2_N)
+    g = StreamingGraph.from_edges(src, dst, N, 4096)
+    model = WalkModel(order=order, p=0.5, q=2.0) if order == 2 else WalkModel()
+    cfg = WalkConfig(n_walks_per_vertex=n_w, length=length, model=model)
+    store = generate_corpus(jax.random.PRNGKey(seed + 1), g, cfg)
+    return WalkEngine(graph=g, store=store, cfg=cfg, merge_policy=policy,
+                      merge_impl=merge_impl, rewalk_capacity=N * n_w,
+                      max_pending=max_pending, mav_capacity=mav_capacity)
+
+
+def make_stream(seed=7, n_batches=5, n_ins=10, n_del=4):
+    return mixed_edge_stream(jax.random.PRNGKey(seed), n_batches, n_ins,
+                             n_del, LOG2_N)
+
+
+def drive_per_batch(eng, key, ins_src, ins_dst, del_src, del_dst):
+    """The per-batch reference driver on the same key split run_stream uses."""
+    keys = jax.random.split(key, ins_src.shape[0])
+    affected = []
+    for i in range(ins_src.shape[0]):
+        affected.append(eng.update_batch(keys[i], ins_src[i], ins_dst[i],
+                                         del_src[i], del_dst[i]))
+    return np.asarray([int(a) for a in affected])
+
+
+def assert_stores_identical(s1, s2):
+    for f in ("owner", "code", "epoch", "offsets", "vmin", "vmax",
+              "slot_epoch", "packed", "widths"):
+        np.testing.assert_array_equal(np.asarray(getattr(s1, f)),
+                                      np.asarray(getattr(s2, f)), err_msg=f)
+
+
+# ------------------------------------------------- pipelined == per-batch
+
+
+@pytest.mark.parametrize("policy,order", [
+    ("on-demand", 1), ("eager", 1), ("on-demand", 2), ("eager", 2)])
+def test_run_stream_matches_per_batch(policy, order):
+    """Scan driver == per-batch driver, bit-identical stores, on mixed
+    insert+delete streams, both merge policies, both walk models."""
+    length = 6 if order == 2 else 8
+    key = jax.random.PRNGKey(11)
+    ins_s, ins_d, del_s, del_d = make_stream()
+    e_ref = make_engine(policy=policy, order=order, length=length)
+    e_scan = make_engine(policy=policy, order=order, length=length)
+
+    aff_ref = drive_per_batch(e_ref, key, ins_s, ins_d, del_s, del_d)
+    aff_scan = np.asarray(e_scan.run_stream(key, ins_s, ins_d, del_s, del_d))
+    np.testing.assert_array_equal(aff_ref, aff_scan)
+    assert e_ref.n_pending == e_scan.n_pending
+    assert e_ref.epoch_counter == e_scan.epoch_counter
+
+    # mid-stream state identical before any merge...
+    assert_stores_identical(e_ref.store, e_scan.store)
+    np.testing.assert_array_equal(np.asarray(e_ref.pending.code),
+                                  np.asarray(e_scan.pending.code))
+    # ...and consolidated state identical after
+    e_ref.merge()
+    e_scan.merge()
+    assert_stores_identical(e_ref.store, e_scan.store)
+    assert not e_ref.mav_overflowed and not e_scan.mav_overflowed
+
+
+@pytest.mark.parametrize("merge_impl", ["interleave", "lexsort"])
+def test_run_stream_merge_impls(merge_impl):
+    """Both merge impls drive the in-scan forced merge identically."""
+    key = jax.random.PRNGKey(13)
+    ins_s, ins_d, del_s, del_d = make_stream(n_batches=7)
+    e_ref = make_engine(merge_impl=merge_impl, max_pending=2)
+    e_scan = make_engine(merge_impl=merge_impl, max_pending=2)
+    drive_per_batch(e_ref, key, ins_s, ins_d, del_s, del_d)
+    e_scan.run_stream(key, ins_s, ins_d, del_s, del_d)
+    # 7 batches with max_pending=2: three in-scan merges happened
+    assert e_scan.n_pending == 1
+    e_ref.merge(), e_scan.merge()
+    assert_stores_identical(e_ref.store, e_scan.store)
+
+
+def test_run_stream_insert_only_and_chaining():
+    """Insertion-only streams (no del arrays) + chaining run_stream with
+    per-batch updates keeps one consistent epoch/pending schedule."""
+    key = jax.random.PRNGKey(5)
+    ins_s, ins_d, _, _ = make_stream(n_batches=4, n_del=0)
+    eng = make_engine()
+    eng.run_stream(key, ins_s, ins_d)
+    assert eng.epoch_counter == 4
+    isrc, idst = rmat_edges(jax.random.PRNGKey(99), 8, LOG2_N)
+    eng.insert_edges(jax.random.PRNGKey(98), isrc, idst)
+    assert eng.epoch_counter == 5
+    # 4 stream batches (1 forced merge at max_pending=3) + 1 per-batch
+    assert eng.n_pending == 2
+    wm = np.asarray(eng.walk_matrix())
+    assert wm.shape == (eng.store.n_walks, eng.store.length)
+
+
+def test_run_stream_overflow_flag_deferred():
+    """MAV gather overflow is accumulated on device and surfaces once at
+    stream end via the lazy property (deferred-overflow contract)."""
+    key = jax.random.PRNGKey(3)
+    ins_s, ins_d, del_s, del_d = make_stream(n_batches=3, n_ins=20)
+    ok = make_engine()
+    ok.run_stream(key, ins_s, ins_d, del_s, del_d)
+    assert not ok.mav_overflowed
+    tiny = make_engine(mav_capacity=4)  # far below touched-segment mass
+    tiny.run_stream(key, ins_s, ins_d, del_s, del_d)
+    assert tiny.mav_overflowed
+
+
+def test_engine_state_is_device_resident():
+    """The legacy per-batch API no longer forces host syncs: counters are
+    device scalars behind lazy accessors."""
+    eng = make_engine()
+    isrc, idst = rmat_edges(jax.random.PRNGKey(2), 10, LOG2_N)
+    ret = eng.insert_edges(jax.random.PRNGKey(1), isrc, idst)
+    assert isinstance(ret, jax.Array) and ret.shape == ()
+    st = eng.state
+    assert isinstance(st, EngineState)
+    for scalar in (st.n_pending, st.epoch, st.last_affected,
+                   st.total_affected, st.overflow):
+        assert isinstance(scalar, jax.Array) and scalar.shape == ()
+    assert eng.last_affected == int(ret)          # lazy sync on access
+    assert eng.total_affected == int(ret)
+    assert eng.n_pending == 1 and eng.epoch_counter == 1  # host mirrors
+
+
+# ------------------------------------------------ overlay == post-merge
+
+
+def _mid_stream_engine(order=1, length=8, n_batches=3):
+    eng = make_engine(order=order, length=length, max_pending=8)
+    key = jax.random.PRNGKey(21)
+    ins_s, ins_d, del_s, del_d = make_stream(n_batches=n_batches)
+    eng.run_stream(key, ins_s, ins_d, del_s, del_d)
+    assert eng.n_pending == n_batches  # genuinely mid-stream
+    return eng
+
+
+@pytest.mark.parametrize("order", [1, 2])
+def test_overlay_traverse_equals_post_merge(order):
+    eng = _mid_stream_engine(order=order, length=6 if order == 2 else 8)
+    ov = eng.overlay()
+    store = eng.store
+    w = jnp.arange(store.n_walks, dtype=U32)
+    start = walk_start_vertex(w, eng.cfg.n_walks_per_vertex)
+    ov_wm = np.asarray(ov.traverse(w, start, store.length - 1))
+    wm = np.asarray(eng.walk_matrix())  # merges
+    np.testing.assert_array_equal(ov_wm, wm)
+
+
+def test_overlay_find_next_equals_post_merge():
+    eng = _mid_stream_engine()
+    ov = eng.overlay()
+    wm = np.asarray(WalkEngine(graph=eng.graph, store=eng.store,
+                               cfg=eng.cfg, pending=eng.pending,
+                               n_pending=eng.n_pending,
+                               rewalk_capacity=eng.rewalk_capacity,
+                               max_pending=eng.max_pending).walk_matrix())
+    rng = np.random.default_rng(1)
+    n = 64
+    ws = rng.integers(0, eng.store.n_walks, n)
+    ps = rng.integers(0, eng.store.length - 1, n)
+    vs = wm[ws, ps].copy()
+    vs[:8] = (vs[:8] + 1) % N  # corrupted-v queries must miss
+    out, found = ov.find_next(jnp.asarray(vs, U32), jnp.asarray(ws, U32),
+                              jnp.asarray(ps, U32))
+    assert bool(np.asarray(found)[8:].all())
+    assert not bool(np.asarray(found)[:8].any())
+    np.testing.assert_array_equal(np.asarray(out)[8:], wm[ws, ps + 1][8:])
+
+
+def test_overlay_empty_pending_is_base():
+    """With no pending blocks the overlay is exactly the base store."""
+    eng = make_engine()
+    ov = eng.overlay()
+    wm_ov = np.asarray(ov.traverse(
+        jnp.arange(eng.store.n_walks, dtype=U32),
+        walk_start_vertex(jnp.arange(eng.store.n_walks, dtype=U32),
+                          eng.cfg.n_walks_per_vertex),
+        eng.store.length - 1))
+    np.testing.assert_array_equal(wm_ov, np.asarray(eng.walk_matrix()))
+
+
+# ------------------------------------------------- mergeless serving
+
+
+def test_service_reads_are_mergeless_and_consistent():
+    """Every WalkQueryService query answers the post-merge result WITHOUT
+    consuming the pending buffer (snapshots are free again)."""
+    eng = _mid_stream_engine()
+    svc = WalkQueryService(engine=eng)
+    # reference: an identical engine, merged
+    ref = WalkEngine(graph=eng.graph, store=eng.store, cfg=eng.cfg,
+                     pending=eng.pending, n_pending=eng.n_pending,
+                     rewalk_capacity=eng.rewalk_capacity,
+                     max_pending=eng.max_pending)
+    wm = np.asarray(ref.walk_matrix())
+
+    rng = np.random.default_rng(4)
+    ws = rng.integers(0, eng.store.n_walks, 32)
+    ps = rng.integers(0, eng.store.length - 1, 32)
+    nxt, found = svc.next_vertices(wm[ws, ps], ws, ps)
+    assert bool(found.all())
+    np.testing.assert_array_equal(np.asarray(nxt), wm[ws, ps + 1])
+
+    for v in (3, 9, 17):
+        row = np.asarray(svc.walks_of([v], capacity=128))[0]
+        got = set(int(w) for w in row if w >= 0)
+        expected = set(np.nonzero((wm == v).any(axis=1))[0].tolist())
+        assert got == expected, (v, got, expected)
+
+    np.testing.assert_array_equal(np.asarray(svc.walk_matrix()), wm)
+    assert eng.n_pending > 0, "a service read forced a merge"
+
+
+def test_ppr_row_cached_per_epoch():
+    eng = make_engine()
+    svc = WalkQueryService(engine=eng)
+    isrc, idst = rmat_edges(jax.random.PRNGKey(31), 10, LOG2_N)
+    eng.insert_edges(jax.random.PRNGKey(30), isrc, idst)
+    r1 = svc.ppr_row(7)
+    wm_a = svc.walk_matrix()
+    assert svc.walk_matrix() is wm_a          # epoch unchanged -> cache hit
+    svc.ppr_row(9)
+    assert svc.walk_matrix() is wm_a
+    assert abs(float(r1.sum()) - 1.0) < 1e-3
+    eng.insert_edges(jax.random.PRNGKey(29), isrc, idst)
+    assert svc.walk_matrix() is not wm_a      # update -> cache invalidated
+    # merges consolidate storage without changing contents: cache survives
+    wm_b = svc.walk_matrix()
+    eng.merge()
+    assert svc.walk_matrix() is wm_b
