@@ -26,6 +26,7 @@ MODULES = [
     "bench_pmin",         # Fig 15 / App. B-C
     "bench_kernels",      # kernel micro-benches
     "bench_downstream",   # Fig 13 + Fig 1
+    "bench_freshness",    # §7.6 closed loop: co-scheduled maintainer
 ]
 
 

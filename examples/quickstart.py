@@ -55,3 +55,34 @@ v, w, p = walks[7][3], jnp.uint32(7), jnp.uint32(3)
 nxt, found = engine.store.find_next(v, w, p)
 print(f"find_next(v={int(v)}, w=7, p=3) -> {int(nxt[0])} "
       f"(found={bool(found[0])}, matches walk: {int(walks[7][4])})")
+
+# 6. the downstream loop (DESIGN.md §7): stream MORE edges while maintaining
+# SGNS embeddings in the same jitted scan — each step retrains only the
+# affected walks' windows — and watch a nearest-neighbor query move
+from repro.downstream import EmbeddingMaintainer, MaintainerConfig
+from repro.serve.walk_queries import WalkQueryService
+
+# lr note (DESIGN.md §7): nearly every walk is affected per batch here, so
+# the SUM-loss accumulation wants a small step (0.01 diverges in this regime)
+mcfg = MaintainerConfig(walk=cfg, n_vertices=N_VERTICES, dim=32, window=3,
+                        rewalk_capacity=4096, lr=0.0005)
+maintainer = EmbeddingMaintainer(graph=engine.graph, store=engine.store,
+                                 cfg=mcfg, key=jax.random.PRNGKey(5))
+service = WalkQueryService(engine=maintainer.engine_view())
+probe = int(walks[7][0])
+service.set_embedding_table(maintainer.embeddings)
+before_ids, _ = service.embedding_neighbors(probe, k=5)
+
+stream_src, stream_dst = edge_batch_stream(jax.random.fold_in(key, 200),
+                                           8, 200, LOG2_N)
+metrics = maintainer.run_stream(jax.random.fold_in(key, 201),
+                                stream_src, stream_dst)
+print(f"maintained embeddings over 8 batches: "
+      f"{int(metrics.n_pairs.sum())} pairs trained on "
+      f"{int(metrics.n_affected.sum())} affected walks "
+      f"(loss/pair {float(metrics.loss_sum.sum() / metrics.n_pairs.sum()):.3f})")
+service.set_embedding_table(maintainer.embeddings)
+after_ids, _ = service.embedding_neighbors(probe, k=5)
+print(f"nearest neighbors of v={probe}: "
+      f"before {[int(i) for i in before_ids[0]]} -> "
+      f"after {[int(i) for i in after_ids[0]]}")

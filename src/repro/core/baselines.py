@@ -10,7 +10,13 @@ same lexsorted layout as Wharf but with three full-width columns and no pairing,
 no chunk heads and no delta compression (~3-4.4x the footprint, paper Fig. 8).
 
 Both reuse the same samplers so corpora are distribution-identical; benchmarks
-compare update cost and memory.
+compare update cost and memory. Both also accept the stacked
+[n_batches, batch] streams of data/streams.py (`edge_batch_stream` /
+`mixed_edge_stream`) through `run_stream`, with the SAME per-batch key split
+as `WalkEngine.run_stream` — freshness/throughput comparisons consume one
+stream object across all engines (the baselines simply replay it batch by
+batch on the host; the scan-pipelined device form is Wharf's advantage, not
+theirs).
 """
 from __future__ import annotations
 
@@ -27,6 +33,33 @@ from repro.core.walkers import sample_next
 
 U32 = jnp.uint32
 I32 = jnp.int32
+
+
+class StackedStreamMixin:
+    """Consume the stacked [n_batches, batch] streams of data/streams.py.
+
+    Splits `key` exactly as `WalkEngine.run_stream` does (one PRNG key per
+    batch via jax.random.split), so a benchmark can hand THE SAME stream
+    arrays and key to Wharf and to a baseline and compare apples-to-apples.
+    Baselines replay the stream per batch on the host — they have no
+    device-resident scan pipeline, which is itself part of the comparison.
+    Returns per-batch affected counts, int32 [n_batches]."""
+
+    def run_stream(self, key, ins_src, ins_dst, del_src=None, del_dst=None):
+        ins_src = jnp.asarray(ins_src, U32)
+        ins_dst = jnp.asarray(ins_dst, U32)
+        if del_src is not None:
+            del_src = jnp.asarray(del_src, U32)
+            del_dst = jnp.asarray(del_dst, U32)
+        n_batches = ins_src.shape[0]
+        keys = jax.random.split(key, n_batches)
+        affected = []
+        for i in range(n_batches):
+            ds = None if del_src is None else del_src[i]
+            dd = None if del_dst is None else del_dst[i]
+            affected.append(self.update_batch(keys[i], ins_src[i],
+                                              ins_dst[i], ds, dd))
+        return jnp.asarray(affected, I32)
 
 
 # --------------------------------------------------------------------------- II
@@ -53,7 +86,7 @@ class InvertedIndex:
 
 
 @dataclass
-class IIEngine:
+class IIEngine(StackedStreamMixin):
     graph: StreamingGraph
     walks: jax.Array           # int32/uint32 [n_walks, l] dense sequences
     index: InvertedIndex
@@ -137,7 +170,7 @@ def _ii_update(key, graph, walks, index, ins_src, ins_dst, del_src, del_dst,
 
 
 @dataclass
-class TreeEngine:
+class TreeEngine(StackedStreamMixin):
     """Tree-based baseline: uncompressed triplet columns, lexsorted.
 
     Mirrors Wharf's update path but stores (owner, walk, pos, next) as four

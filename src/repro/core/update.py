@@ -51,6 +51,20 @@ U32 = jnp.uint32
 I32 = jnp.int32
 
 
+class UpdateAux(NamedTuple):
+    """Per-update affected-walk identification (fixed [capacity] lanes).
+
+    What a downstream consumer needs to retrain ONLY the walks one update
+    touched (downstream/maintainer.py): the compacted affected-walk ids, the
+    lane-validity mask (ids past the affected count are padding), and each
+    walk's p_min — positions >= p_min were re-sampled this update, so pair
+    windows entirely inside [0, p_min) are unchanged and skippable."""
+
+    walk_ids: jax.Array    # uint32 [capacity] compacted affected walk ids
+    lane_valid: jax.Array  # bool   [capacity] lanes < |affected|
+    p_min: jax.Array       # int32  [capacity] first re-sampled position
+
+
 class PendingBlocks(NamedTuple):
     """Fixed-capacity insertion-accumulator rows (walk-tree versions).
 
@@ -227,7 +241,8 @@ class WalkEngine:
             self.merge()
         return self.state.last_affected
 
-    def run_stream(self, key, ins_src, ins_dst, del_src=None, del_dst=None):
+    def run_stream(self, key, ins_src, ins_dst, del_src=None, del_dst=None,
+                   return_masks: bool = False):
         """Consume a whole [n_batches, batch] edge stream in ONE jitted scan.
 
         Per scan step: graph merge -> MAV -> rewalk -> accumulator append,
@@ -242,6 +257,11 @@ class WalkEngine:
         optional ([n_batches, d]; zero-width allowed). Returns the per-batch
         affected counts as an int32[n_batches] device array; MAV overflow is
         accumulated on device and surfaces once via `mav_overflowed`.
+
+        With `return_masks=True` returns `(affected, aux)` where `aux` is a
+        stacked `UpdateAux` ([n_batches, capacity] leaves): each step's
+        affected-walk ids / lane validity / p_min — the per-step masks the
+        downstream embedding maintainer consumes.
         """
         ins_src = jnp.asarray(ins_src, U32)
         ins_dst = jnp.asarray(ins_dst, U32)
@@ -254,18 +274,19 @@ class WalkEngine:
             del_dst = jnp.asarray(del_dst, U32)
         keys = jax.random.split(key, n_batches)
 
-        self.state, affected = _run_stream_jit(
+        self.state, out = _run_stream_jit(
             self.state, keys, ins_src, ins_dst, del_src, del_dst,
             cfg=self.cfg, capacity=self.rewalk_capacity,
             mav_capacity=self._mav_capacity(), max_pending=self.max_pending,
-            merge_policy=self.merge_policy, merge_impl=self.merge_impl)
+            merge_policy=self.merge_policy, merge_impl=self.merge_impl,
+            with_masks=return_masks)
 
         # host mirrors: the merge schedule is data-independent
         self._n_pending_host = pending_after_stream(
             self._n_pending_host, n_batches, self.max_pending,
             self.merge_policy)
         self._epoch_host += n_batches
-        return affected
+        return out
 
     def _mav_capacity(self) -> int:
         return self.mav_capacity or self.state.store.size
@@ -310,9 +331,12 @@ class WalkEngine:
 
 
 def _apply_update(state: EngineState, ins_src, ins_dst, del_src, del_dst,
-                  key, cfg: WalkConfig, capacity: int,
-                  mav_capacity: int) -> EngineState:
-    """One Algorithm-2 update appended as a pending version block (pure)."""
+                  key, cfg: WalkConfig, capacity: int, mav_capacity: int):
+    """One Algorithm-2 update appended as a pending version block (pure).
+
+    Returns (EngineState, UpdateAux) — the aux names the affected walks so
+    callers (the maintainer pipeline) can act on exactly this update's
+    re-walked set without re-deriving the MAV."""
     # 1. apply the graph update (paper: MAV is built while updating)
     graph = state.graph.apply_batch(ins_src, ins_dst, del_src, del_dst)
     store, pending = state.store, state.pending
@@ -353,8 +377,8 @@ def _apply_update(state: EngineState, ins_src, ins_dst, del_src, del_dst,
         store.length, store.n_walks)
 
     # 3-5. re-walk affected walks into a fresh version block
-    block, slot_epoch, n_aff = _rewalk(key, graph, store, pending, mav,
-                                       new_epoch, cfg, capacity)
+    block, slot_epoch, n_aff, aux = _rewalk(key, graph, store, pending, mav,
+                                            new_epoch, cfg, capacity)
     pending = PendingBlocks(
         owner=jax.lax.dynamic_update_index_in_dim(
             pending.owner, block.owner, state.n_pending, 0),
@@ -369,7 +393,7 @@ def _apply_update(state: EngineState, ins_src, ins_dst, del_src, del_dst,
         graph=graph, store=store.replace(slot_epoch=slot_epoch),
         pending=pending, n_pending=state.n_pending + 1, epoch=new_epoch,
         last_affected=n_aff, total_affected=state.total_affected + n_aff,
-        overflow=state.overflow | overflow)
+        overflow=state.overflow | overflow), aux
 
 
 def _merged_store(store: WalkStore, pending: PendingBlocks,
@@ -413,22 +437,38 @@ def pending_after_stream(n_pending: int, n_batches: int, max_pending: int,
     return (n_pending + n_batches - 1) % max_pending + 1
 
 
+def stream_step_aux(state: EngineState, key, ins_src, ins_dst, del_src,
+                    del_dst, cfg: WalkConfig, capacity: int,
+                    mav_capacity: int, max_pending: int, merge_policy: str,
+                    merge_impl: str):
+    """One streaming-pipeline step (pure): policy merges + Algorithm 2.
+
+    Returns (EngineState, UpdateAux). The aux identifies THIS step's
+    affected walks — the hook the downstream maintainer co-schedules its
+    incremental SGNS retraining on (downstream/maintainer.py). Note the aux
+    is valid against the post-step state regardless of policy: an eager
+    merge folds the pending block into the base, but the affected walk ids
+    and p_min are store-layout-independent."""
+    merge = partial(_merge_state, cfg=cfg, merge_impl=merge_impl)
+    state = jax.lax.cond(state.n_pending >= jnp.asarray(max_pending, I32),
+                         merge, lambda s: s, state)
+    state, aux = _apply_update(state, ins_src, ins_dst, del_src, del_dst,
+                               key, cfg, capacity, mav_capacity)
+    if merge_policy == "eager":
+        state = merge(state)
+    return state, aux
+
+
 def stream_step(state: EngineState, key, ins_src, ins_dst, del_src, del_dst,
                 cfg: WalkConfig, capacity: int, mav_capacity: int,
                 max_pending: int, merge_policy: str,
                 merge_impl: str) -> EngineState:
-    """One streaming-pipeline step (pure): policy merges + Algorithm 2.
-
-    THE shared update step — the per-batch driver, the `run_stream` scan,
+    """THE shared update step — the per-batch driver, the `run_stream` scan,
     and the distributed engine all run this exact function, which is what
     makes the three drivers bit-identical on the same key stream."""
-    merge = partial(_merge_state, cfg=cfg, merge_impl=merge_impl)
-    state = jax.lax.cond(state.n_pending >= jnp.asarray(max_pending, I32),
-                         merge, lambda s: s, state)
-    state = _apply_update(state, ins_src, ins_dst, del_src, del_dst, key,
-                          cfg, capacity, mav_capacity)
-    if merge_policy == "eager":
-        state = merge(state)
+    state, _ = stream_step_aux(state, key, ins_src, ins_dst, del_src,
+                               del_dst, cfg, capacity, mav_capacity,
+                               max_pending, merge_policy, merge_impl)
     return state
 
 
@@ -444,28 +484,35 @@ def _update_jit(graph, store, pending, n_pending, epoch, total_affected,
                         n_pending=n_pending, epoch=epoch,
                         last_affected=jnp.asarray(0, I32),
                         total_affected=total_affected, overflow=overflow)
-    return _apply_update(state, ins_src, ins_dst, del_src, del_dst, key,
-                         cfg, capacity, mav_capacity)
+    state, _ = _apply_update(state, ins_src, ins_dst, del_src, del_dst, key,
+                             cfg, capacity, mav_capacity)
+    return state
 
 
 @partial(jax.jit,
          static_argnames=("cfg", "capacity", "mav_capacity", "max_pending",
-                          "merge_policy", "merge_impl"),
+                          "merge_policy", "merge_impl", "with_masks"),
          donate_argnums=(0,))
 def _run_stream_jit(state: EngineState, keys, ins_src, ins_dst, del_src,
                     del_dst, cfg: WalkConfig, capacity: int,
                     mav_capacity: int, max_pending: int, merge_policy: str,
-                    merge_impl: str):
+                    merge_impl: str, with_masks: bool = False):
     """The scan-pipelined driver: n_batches updates, zero host round-trips.
 
     The whole EngineState is donated (in-place buffer reuse across the
-    stream); overflow/affected ride the carry as device scalars."""
+    stream); overflow/affected ride the carry as device scalars. With
+    `with_masks` the scan also emits each step's UpdateAux — the per-step
+    affected-walk sets (not just the end-of-stream scalar), stacked to
+    [n_batches, capacity], for consumers that retrain on exactly the walks
+    each batch touched."""
 
     def body(s, xs):
         k, i_s, i_d, d_s, d_d = xs
-        s = stream_step(s, k, i_s, i_d, d_s, d_d, cfg, capacity,
-                        mav_capacity, max_pending, merge_policy, merge_impl)
-        return s, s.last_affected
+        s, aux = stream_step_aux(s, k, i_s, i_d, d_s, d_d, cfg, capacity,
+                                 mav_capacity, max_pending, merge_policy,
+                                 merge_impl)
+        out = (s.last_affected, aux) if with_masks else s.last_affected
+        return s, out
 
     return jax.lax.scan(body, state, (keys, ins_src, ins_dst, del_src,
                                       del_dst))
@@ -551,7 +598,8 @@ def _rewalk(key, graph: StreamingGraph, store: WalkStore,
     block = VersionBlock(owner=owners, code=codes, epoch=epoch,
                          slot=jnp.where(emits, slots, 0).astype(I32),
                          n_new=jnp.sum(emits).astype(I32))
-    return block, slot_epoch, n_aff
+    aux = UpdateAux(walk_ids=walk_ids, lane_valid=lane_valid, p_min=p_min)
+    return block, slot_epoch, n_aff, aux
 
 
 def merge_interleave(base: WalkStore, acc_owner, acc_code, acc_epoch,

@@ -1,0 +1,16 @@
+"""Downstream subsystem: streaming embedding maintenance co-scheduled with
+walk updates (paper §7.6 closed-loop; DESIGN.md §7).
+
+The engine keeps walks fresh so that DOWNSTREAM consumers stay fresh; this
+package closes that loop: `EmbeddingMaintainer` carries (EngineState, SGNS
+params, opt state) through one jitted scan where every stream step applies
+the graph update AND retrains exactly the affected walks' windows.
+"""
+from repro.downstream.maintainer import (  # noqa: F401
+    EmbeddingMaintainer,
+    MaintainerConfig,
+    MaintainerState,
+    StepMetrics,
+    init_maintainer,
+    maintain_step,
+)

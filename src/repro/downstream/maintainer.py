@@ -1,0 +1,367 @@
+"""Streaming embedding maintenance co-scheduled with walk updates.
+
+The paper's whole justification for keeping walks fresh is the downstream
+task (§7.6: DeepWalk/node2vec -> vertex classification): stale walks degrade
+embedding quality. This module closes that loop as one pipeline:
+
+    edge batch --stream_step--> fresh walks + affected set (UpdateAux)
+                                     |
+               overlay reads of ONLY the affected walks' windows
+                                     |
+            masked skip-gram pairs (vskip-style stale-prefix filter)
+                                     |
+         fused SGNS step (kernels/sgns.py backend registry) -> params
+
+`MaintainerState = (EngineState, SGNS params, opt state)` is one pytree, and
+`maintain_stream` runs a whole [n_batches, batch] edge stream through a
+SINGLE jitted `lax.scan` with that pytree as the (donated) carry: graph
+update, overlay pair extraction, and embedding training never return to the
+host between batches. The engine half of the carry advances through the
+exact `stream_step` the plain drivers run, so maintaining embeddings
+alongside a stream leaves a bit-identical walk store (tests/test_downstream).
+
+Incremental contract ("vskip" scheme of Sajjad et al., Efficient
+Representation Learning Using Random Walks for Dynamic Graphs): per step
+only pairs from affected walks are trained, and within an affected walk only
+windows touching the re-sampled suffix [p_min, l). The pairs-trained ratio
+vs full retraining and the resulting quality gap are recorded by
+benchmarks/bench_freshness.py into BENCH_FRESHNESS.json.
+
+Checkpointing: MaintainerState is a plain pytree, so train/checkpoint.py
+saves/restores streaming state and model state together — a restore resumes
+BOTH the walk corpus and the embedding table at the same stream position
+(`EmbeddingMaintainer.load_state` re-syncs the host-side merge-schedule
+mirrors from the device epoch counter).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from functools import partial
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.corpus import WalkConfig, walk_start_vertex
+from repro.core.graph import StreamingGraph
+from repro.core.overlay import Overlay
+from repro.core.store import WalkStore
+from repro.core.update import (EngineState, WalkEngine, pending_after_stream,
+                               stream_step_aux)
+from repro.kernels.sgns import ROWS
+from repro.models.embeddings import (affected_pairs, masked_sgns_step,
+                                     n_window_pairs)
+
+F32 = jnp.float32
+I32 = jnp.int32
+I64 = jnp.int64
+U32 = jnp.uint32
+
+
+@dataclass(frozen=True)
+class MaintainerConfig:
+    """Static co-scheduling configuration (hashable -> jit-static).
+
+    The walk/engine half mirrors WalkEngine's knobs; the SGNS half mirrors
+    models/embeddings.SGNSConfig. `lr_decay_steps > 0` enables word2vec's
+    linear learning-rate decay driven by the opt-state step counter (floored
+    at `lr_min_frac * lr`)."""
+
+    walk: WalkConfig
+    n_vertices: int
+    dim: int = 64
+    window: int = 3
+    n_negative: int = 4
+    # SUM-loss + scatter-add accumulation means each table row absorbs every
+    # colliding pair's step; 0.01 is stable across the bench/test regimes
+    # where word2vec's classic 0.025 (per-pair sequential updates) diverges
+    lr: float = 0.01
+    lr_min_frac: float = 0.1
+    lr_decay_steps: int = 0
+    skip_stale_prefix: bool = True
+    max_pairs: int = 0            # 0 = train every live pair
+    rewalk_capacity: int = 1024
+    max_pending: int = 8
+    mav_capacity: int = 0         # 0 = resolved to store.size at init
+    merge_policy: str = "on-demand"
+    merge_impl: str = "interleave"
+    sgns_backend: Optional[str] = None
+
+    @property
+    def pairs_per_walk(self) -> int:
+        return n_window_pairs(self.walk.length, self.window)
+
+    @property
+    def pair_batch(self) -> int:
+        """Static pair-batch size: capacity * pairs-per-walk, optionally
+        capped by `max_pairs`, rounded up to the kernel's 8-row tile."""
+        p = self.rewalk_capacity * self.pairs_per_walk
+        if self.max_pairs:
+            p = min(p, self.max_pairs)
+        return -(-p // ROWS) * ROWS
+
+    def replace(self, **kw) -> "MaintainerConfig":
+        return dataclasses.replace(self, **kw)
+
+
+class MaintainerState(NamedTuple):
+    """The co-scheduled pipeline state: ONE pytree, checkpointable whole."""
+
+    engine: EngineState
+    params: dict    # {"in": [n, d], "out": [n, d]} SGNS tables
+    opt: dict       # {"step": i32 [], "pairs": i64 []} schedule + accounting
+
+
+class StepMetrics(NamedTuple):
+    loss_sum: jax.Array    # f32 [] summed SGNS loss over trained pairs
+    n_pairs: jax.Array     # i32 [] pairs trained this step
+    n_affected: jax.Array  # i32 [] affected walks this step (|MAV|)
+
+
+def init_params(key, n_vertices: int, dim: int):
+    """word2vec init: small random input table, zero output table."""
+    return {
+        "in": (jax.random.normal(key, (n_vertices, dim), F32)
+               * (1.0 / dim ** 0.5)),
+        "out": jnp.zeros((n_vertices, dim), F32),
+    }
+
+
+def init_maintainer(key, graph: StreamingGraph, store: WalkStore,
+                    cfg: MaintainerConfig) -> MaintainerState:
+    engine = EngineState.create(graph, store, cfg.max_pending,
+                                cfg.rewalk_capacity * cfg.walk.length)
+    return MaintainerState(
+        engine=engine,
+        params=init_params(key, cfg.n_vertices, cfg.dim),
+        opt={"step": jnp.asarray(0, I32), "pairs": jnp.asarray(0, I64)})
+
+
+def _lr_schedule(cfg: MaintainerConfig, step):
+    if not cfg.lr_decay_steps:
+        return jnp.asarray(cfg.lr, F32)
+    frac = 1.0 - step.astype(F32) / cfg.lr_decay_steps
+    return cfg.lr * jnp.maximum(frac, cfg.lr_min_frac)
+
+
+def maintain_step(state: MaintainerState, key_update, key_train, ins_src,
+                  ins_dst, del_src, del_dst, cfg: MaintainerConfig,
+                  mav_capacity: int):
+    """One co-scheduled step (pure): stream_step + affected-only SGNS.
+
+    The engine carry advances through the SAME `stream_step` the plain
+    drivers run (bit-identical stores on the same update keys); the aux
+    names this step's affected walks, whose windows are read mergelessly
+    through the overlay (base + pending, slot-epoch precedence) so training
+    sees the post-update walk content without forcing a merge."""
+    wcfg = cfg.walk
+    engine, aux = stream_step_aux(
+        state.engine, key_update, ins_src, ins_dst, del_src, del_dst,
+        wcfg, cfg.rewalk_capacity, mav_capacity, cfg.max_pending,
+        cfg.merge_policy, cfg.merge_impl)
+
+    # mergeless read of the affected walks' post-update windows
+    ov = Overlay.build(engine.store, engine.pending)
+    start = walk_start_vertex(aux.walk_ids, wcfg.n_walks_per_vertex)
+    walks = ov.traverse(aux.walk_ids, start, wcfg.length - 1)  # [cap, l]
+
+    k_sub, k_neg = jax.random.split(key_train)
+    b = cfg.pair_batch
+    lane_valid, p_min = aux.lane_valid, aux.p_min
+    ppw = cfg.pairs_per_walk
+    if b < cfg.rewalk_capacity * ppw:
+        # max_pairs budget: subsample at the LANE level before pair
+        # expansion, so peak memory stays O(budget + capacity), not
+        # O(capacity * pairs_per_walk) — valid lanes first, in uniform
+        # random order (deterministic in key_train)
+        n_lanes = -(-b // ppw)
+        r = jax.random.uniform(k_sub, (cfg.rewalk_capacity,))
+        order = jnp.argsort(jnp.where(lane_valid, r, 2.0))[:n_lanes]
+        walks = walks[order]
+        lane_valid, p_min = lane_valid[order], p_min[order]
+
+    centers, contexts, mask = affected_pairs(
+        walks, lane_valid, p_min, cfg.window,
+        skip_stale_prefix=cfg.skip_stale_prefix)
+
+    n_all = centers.shape[0]
+    if b < n_all:  # trim the boundary lane's tail to the exact budget
+        centers, contexts, mask = centers[:b], contexts[:b], mask[:b]
+    elif b > n_all:  # pad to the 8-row kernel tile
+        pad = b - n_all
+        centers = jnp.concatenate([centers, jnp.zeros((pad,), I32)])
+        contexts = jnp.concatenate([contexts, jnp.zeros((pad,), I32)])
+        mask = jnp.concatenate([mask, jnp.zeros((pad,), bool)])
+
+    negatives = jax.random.randint(k_neg, (b, cfg.n_negative), 0,
+                                   cfg.n_vertices, dtype=I32)
+    lr_t = _lr_schedule(cfg, state.opt["step"])
+    params, loss_sum, n_pairs = masked_sgns_step(
+        state.params, centers, contexts, negatives, mask, lr_t,
+        backend=cfg.sgns_backend)
+
+    opt = {"step": state.opt["step"] + 1,
+           "pairs": state.opt["pairs"] + n_pairs.astype(I64)}
+    metrics = StepMetrics(loss_sum=loss_sum, n_pairs=n_pairs.astype(I32),
+                          n_affected=engine.last_affected)
+    return MaintainerState(engine=engine, params=params, opt=opt), metrics
+
+
+@partial(jax.jit, static_argnames=("cfg", "mav_capacity"),
+         donate_argnums=(0,))
+def _maintain_step_jit(state, key_update, key_train, ins_src, ins_dst,
+                       del_src, del_dst, cfg: MaintainerConfig,
+                       mav_capacity: int):
+    return maintain_step(state, key_update, key_train, ins_src, ins_dst,
+                         del_src, del_dst, cfg, mav_capacity)
+
+
+@partial(jax.jit, static_argnames=("cfg", "mav_capacity"),
+         donate_argnums=(0,))
+def _maintain_stream_jit(state: MaintainerState, update_keys, train_keys,
+                         ins_src, ins_dst, del_src, del_dst,
+                         cfg: MaintainerConfig, mav_capacity: int):
+    """A whole edge stream + its embedding maintenance in ONE jitted scan.
+
+    The carry (engine + params + opt) is donated; per-step metrics are
+    stacked as the scan output. Zero host round-trips between batches —
+    the co-scheduled twin of `core.update._run_stream_jit`."""
+
+    def body(s, xs):
+        ku, kt, i_s, i_d, d_s, d_d = xs
+        s, m = maintain_step(s, ku, kt, i_s, i_d, d_s, d_d, cfg,
+                             mav_capacity)
+        return s, m
+
+    return jax.lax.scan(body, state, (update_keys, train_keys, ins_src,
+                                      ins_dst, del_src, del_dst))
+
+
+class EmbeddingMaintainer:
+    """Stateful wrapper: a WalkEngine whose stream steps also train SGNS.
+
+    Mirrors `WalkEngine`'s driver surface (per-batch `step`, scan-pipelined
+    `run_stream`) over a `MaintainerState` carry. The update-key handling is
+    IDENTICAL to WalkEngine's (`jax.random.split(key, n_batches)`), so the
+    maintained engine state matches a plain engine run on the same keys
+    bit-for-bit; training randomness comes from an independent key."""
+
+    def __init__(self, graph: StreamingGraph = None, store: WalkStore = None,
+                 cfg: MaintainerConfig = None, key=None):
+        if cfg.mav_capacity == 0:
+            cfg = cfg.replace(mav_capacity=store.size)
+        self.cfg = cfg
+        key = jax.random.PRNGKey(0) if key is None else key
+        self.state = init_maintainer(key, graph, store, cfg)
+        self._n_pending_host = 0
+        self._epoch_host = 0
+
+    # ----------------------------------------------------- state projections
+
+    @property
+    def params(self) -> dict:
+        return self.state.params
+
+    @property
+    def embeddings(self) -> jax.Array:
+        """The maintained embedding table (the SGNS input vectors)."""
+        return self.state.params["in"]
+
+    @property
+    def engine_state(self) -> EngineState:
+        return self.state.engine
+
+    @property
+    def epoch_counter(self) -> int:
+        return self._epoch_host
+
+    @property
+    def pairs_trained(self) -> int:
+        """Cumulative pairs trained (lazy: syncs on access only)."""
+        return int(self.state.opt["pairs"])
+
+    @property
+    def mav_overflowed(self) -> bool:
+        """Sticky MAV overflow flag (deferred-overflow contract: check once
+        at stream end; lazy sync)."""
+        return bool(self.state.engine.overflow)
+
+    def engine_view(self) -> WalkEngine:
+        """A WalkEngine sharing this maintainer's engine state (for the
+        serving layer / walk_matrix reads). Mutations through the view and
+        further maintainer steps must not interleave."""
+        c = self.cfg
+        # pass the live pending buffer through so the ctor doesn't allocate
+        # a throwaway one (at production capacities that's GBs of device
+        # memory); the state overwrite below installs the full carry
+        eng = WalkEngine(graph=self.state.engine.graph,
+                         store=self.state.engine.store, cfg=c.walk,
+                         merge_policy=c.merge_policy, merge_impl=c.merge_impl,
+                         rewalk_capacity=c.rewalk_capacity,
+                         max_pending=c.max_pending,
+                         mav_capacity=c.mav_capacity,
+                         pending=self.state.engine.pending,
+                         n_pending=self._n_pending_host)
+        eng.state = self.state.engine
+        eng._n_pending_host = self._n_pending_host
+        eng._epoch_host = self._epoch_host
+        return eng
+
+    def load_state(self, state: MaintainerState) -> None:
+        """Install a (restored) MaintainerState and re-sync the host-side
+        merge-schedule mirrors from the device epoch counter (one sync;
+        the schedule itself is data-independent)."""
+        self.state = state
+        self._epoch_host = int(state.engine.epoch)
+        self._n_pending_host = pending_after_stream(
+            0, self._epoch_host, self.cfg.max_pending, self.cfg.merge_policy)
+
+    # ------------------------------------------------------------------ API
+
+    def step(self, key_update, key_train, ins_src, ins_dst, del_src=None,
+             del_dst=None) -> StepMetrics:
+        """One co-scheduled update+train batch (per-batch driver)."""
+        e = lambda: jnp.zeros((0,), U32)
+        ins_src = e() if ins_src is None else jnp.asarray(ins_src, U32)
+        ins_dst = e() if ins_dst is None else jnp.asarray(ins_dst, U32)
+        del_src = e() if del_src is None else jnp.asarray(del_src, U32)
+        del_dst = e() if del_dst is None else jnp.asarray(del_dst, U32)
+        self.state, metrics = _maintain_step_jit(
+            self.state, key_update, key_train, ins_src, ins_dst, del_src,
+            del_dst, self.cfg, self.cfg.mav_capacity)
+        self._advance_mirrors(1)
+        return metrics
+
+    def run_stream(self, key, ins_src, ins_dst, del_src=None, del_dst=None,
+                   train_key=None) -> StepMetrics:
+        """Consume a whole [n_batches, batch] edge stream in ONE jitted scan,
+        maintaining embeddings as it goes. Returns stacked per-batch
+        StepMetrics. `key` drives the walk updates exactly as
+        `WalkEngine.run_stream` would; `train_key` (default: derived from
+        `key`) drives negative sampling / pair subsampling."""
+        ins_src = jnp.asarray(ins_src, U32)
+        ins_dst = jnp.asarray(ins_dst, U32)
+        n_batches = ins_src.shape[0]
+        if del_src is None:
+            del_src = jnp.zeros((n_batches, 0), U32)
+            del_dst = jnp.zeros((n_batches, 0), U32)
+        else:
+            del_src = jnp.asarray(del_src, U32)
+            del_dst = jnp.asarray(del_dst, U32)
+        update_keys = jax.random.split(key, n_batches)
+        if train_key is None:
+            train_key = jax.random.fold_in(key, 0x5465)
+        train_keys = jax.random.split(train_key, n_batches)
+
+        self.state, metrics = _maintain_stream_jit(
+            self.state, update_keys, train_keys, ins_src, ins_dst, del_src,
+            del_dst, self.cfg, self.cfg.mav_capacity)
+        self._advance_mirrors(n_batches)
+        return metrics
+
+    def _advance_mirrors(self, n_batches: int) -> None:
+        self._n_pending_host = pending_after_stream(
+            self._n_pending_host, n_batches, self.cfg.max_pending,
+            self.cfg.merge_policy)
+        self._epoch_host += n_batches

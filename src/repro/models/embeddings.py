@@ -5,8 +5,11 @@ embeddings -> vertex classification): pairs are drawn from walk windows, the
 objective is log σ(u·v⁺) + Σ log σ(-u·v⁻). `vskip`-style incremental refresh:
 after a Wharf batch update only the affected walks' windows are re-trained.
 
-The fused Pallas kernel (kernels/sgns.py) implements the hot inner step
-(gather + [B,D]x[D,K] MXU matmul + logsigmoid + scatter-grad) for TPU.
+The fused inner step (gather + [B,D]x[D,K] MXU matmul + logsigmoid +
+scatter-grad) routes through the kernels/sgns.py backend registry: the
+Pallas kernel on TPU, the same kernel math in XLA on CPU. The pure pair
+extraction below feeds it from overlay-read affected-walk windows — the
+streaming co-scheduled form lives in downstream/maintainer.py.
 """
 from __future__ import annotations
 
@@ -52,6 +55,63 @@ def window_pairs(walks, window: int):
     return jnp.concatenate(centers), jnp.concatenate(contexts)
 
 
+# ---------------------------------------------------- pure pair extraction
+#
+# Fixed-shape, trace-friendly building blocks for the streaming maintainer
+# (downstream/maintainer.py): walk windows come from mergeless overlay reads
+# of ONLY the affected walks, and every function here is pure with static
+# output shapes so the whole extract-and-train step lives inside one jitted
+# lax.scan alongside the engine's stream_step.
+
+
+def n_window_pairs(length: int, window: int) -> int:
+    """Ordered in-window pairs per walk: 2 * Σ_{off=1..window} (l - off)."""
+    return 2 * sum(length - off for off in range(1, min(window, length - 1) + 1))
+
+
+def window_pair_index(length: int, window: int):
+    """Static per-walk pair position index: (c_pos, x_pos) int32 [P_walk].
+
+    Row j of any [W, L] walk matrix yields pair j*P_walk+k as
+    (walks[j, c_pos[k]], walks[j, x_pos[k]]) — the same pair set as
+    `window_pairs`, but with positions kept explicit so freshness filters
+    (vskip-style p_min masking) can reason about WHERE a pair sits."""
+    c, x = [], []
+    for off in range(1, min(window, length - 1) + 1):
+        for i in range(length - off):
+            c.append(i)
+            x.append(i + off)
+            c.append(i + off)
+            x.append(i)
+    return jnp.asarray(c, I32), jnp.asarray(x, I32)
+
+
+def affected_pairs(walks, lane_valid, p_min, window: int,
+                   skip_stale_prefix: bool = True):
+    """Skip-gram pairs of affected walks, masked for incremental training.
+
+    walks       int [W, L]  overlay-read windows of the affected walks
+    lane_valid  bool [W]    padding lanes (compact_nonzero fill) are False
+    p_min       int32 [W]   first re-sampled position of each walk
+
+    Returns (centers u32 [W*P_walk], contexts u32 [W*P_walk], mask bool).
+    A pair is trained iff its lane is valid AND (unless
+    `skip_stale_prefix=False`) its window touches the re-walked suffix
+    [p_min, L) — the `vskip` scheme of Sajjad et al.: pairs entirely inside
+    the unchanged prefix [0, p_min) were already trained when that prefix
+    was fresh, so re-training them buys no freshness."""
+    w, length = walks.shape
+    c_pos, x_pos = window_pair_index(length, window)
+    centers = walks[:, c_pos]                                # [W, P_walk]
+    contexts = walks[:, x_pos]
+    mask = jnp.broadcast_to(lane_valid[:, None], centers.shape)
+    if skip_stale_prefix:
+        touches = jnp.maximum(c_pos, x_pos)[None, :] >= p_min[:, None]
+        mask = mask & touches
+    return (centers.reshape(-1).astype(I32),
+            contexts.reshape(-1).astype(I32), mask.reshape(-1))
+
+
 def sgns_loss(params, centers, contexts, negatives):
     """centers/contexts [B]; negatives [B, K]. SUM over pairs (word2vec
     applies per-pair updates; a mean-normalized loss would shrink the
@@ -63,6 +123,32 @@ def sgns_loss(params, centers, contexts, negatives):
     neg = jnp.einsum("bd,bkd->bk", u, vn)
     return -(jax.nn.log_sigmoid(pos).sum()
              + jax.nn.log_sigmoid(-neg).sum())
+
+
+def masked_sgns_step(params, centers, contexts, negatives, mask, lr,
+                     backend=None):
+    """One fused-kernel SGNS step over a masked pair batch (pure).
+
+    The per-pair grads come from the kernels/sgns.py backend registry
+    (Pallas on TPU, XLA kernel math on CPU) and are scatter-added into the
+    tables, which is exactly grad-of-sum-loss over the masked pairs —
+    equivalent to `sgns_step` on the mask's pair subset (tested). Masked-out
+    pairs (padding lanes, stale-prefix windows) contribute nothing, so their
+    gathered garbage rows are harmless.
+
+    Returns (params, loss_sum, n_pairs) with loss summed over live pairs.
+    """
+    from repro.kernels.sgns import sgns_apply
+    u = params["in"][centers]                       # [B, D]
+    vp = params["out"][contexts]                    # [B, D]
+    vn = params["out"][negatives]                   # [B, K, D]
+    loss, du, dvp, dvn = sgns_apply(u, vp, vn, backend)
+    m = mask.astype(params["in"].dtype)
+    new_in = params["in"].at[centers].add(-lr * du * m[:, None])
+    new_out = params["out"].at[contexts].add(-lr * dvp * m[:, None])
+    new_out = new_out.at[negatives].add(-lr * dvn * m[:, None, None])
+    return ({"in": new_in, "out": new_out},
+            jnp.sum(loss * m), jnp.sum(mask))
 
 
 @partial(jax.jit, donate_argnums=(0,))

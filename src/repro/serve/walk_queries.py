@@ -24,6 +24,11 @@ Query kinds:
                               (feeds GraphSAGE minibatching / Pixie-style recs)
   * ppr_row(v)              — personalized-PageRank scores from the corpus
                               (walk matrix cached per engine epoch)
+  * embedding_neighbors(v)  — cosine nearest neighbors in the maintained
+                              embedding table (downstream/maintainer.py);
+                              the table is installed/refreshed via
+                              set_embedding_table, normalized once per
+                              install (the recommender/ANN-style read)
 
 Staleness/caching: the overlay is rebuilt only when the engine state object
 changes (updates and merges swap the immutable pytree); the ppr walk matrix
@@ -36,6 +41,7 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Optional
 
+import jax
 import jax.numpy as jnp
 
 from repro.core import packed_store, pairing
@@ -58,6 +64,7 @@ class WalkQueryService:
     _overlay_state: object = field(default=None, repr=False)
     _wm_cache: object = field(default=None, repr=False)
     _wm_epoch: int = field(default=-1, repr=False)
+    _emb_normed: object = field(default=None, repr=False)
 
     def snapshot(self) -> Overlay:
         """Consistent read snapshot — mergeless and O(|pending|) to build.
@@ -145,6 +152,30 @@ class WalkQueryService:
                                          backend=self.backend)
             self._wm_epoch = epoch
         return self._wm_cache
+
+    def set_embedding_table(self, table) -> None:
+        """Install/refresh the maintained embedding table ([n, d], e.g.
+        `EmbeddingMaintainer.embeddings`). Rows are L2-normalized once here
+        so each query is a plain matmul + top-k."""
+        table = jnp.asarray(table, jnp.float32)
+        norm = jnp.maximum(jnp.linalg.norm(table, axis=1, keepdims=True),
+                           1e-6)
+        self._emb_normed = table / norm
+
+    def embedding_neighbors(self, vertices, k: int = 10):
+        """Cosine top-k neighbors of each query vertex in the maintained
+        embedding table: (ids int32 [B, k], scores f32 [B, k]), the query
+        vertex itself excluded. Requires set_embedding_table first."""
+        if self._emb_normed is None:
+            raise ValueError("no embedding table installed — call "
+                             "set_embedding_table(maintainer.embeddings)")
+        vertices = jnp.atleast_1d(jnp.asarray(vertices, I32))
+        q = self._emb_normed[vertices]                    # [B, d]
+        scores = q @ self._emb_normed.T                   # [B, n]
+        scores = scores.at[jnp.arange(vertices.shape[0]), vertices].set(
+            -jnp.inf)
+        top, ids = jax.lax.top_k(scores, k)
+        return ids.astype(I32), top
 
     def ppr_row(self, v: int, restart_prob: float = 0.2):
         """Personalized PageRank scores of vertex v over all vertices.

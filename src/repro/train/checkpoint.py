@@ -12,7 +12,11 @@ Design (1000+-node posture, DESIGN.md §4):
     leaf for the *new* mesh/sharding, so a 512-chip checkpoint restores onto
     256 chips (or any other mesh) without conversion — re-sharding on load
   * walk-engine state (graph + triplet store) checkpoints through the same
-    path: it is just another pytree
+    path: it is just another pytree — registered-dataclass leaves
+    (EngineState/WalkStore/StreamingGraph) get stable attribute-named paths,
+    so the downstream maintainer's (EngineState, SGNS params, opt) carry
+    saves and restores as ONE step: streaming and training resume together
+    at the same stream position (tests/test_downstream.py)
 """
 from __future__ import annotations
 
@@ -28,12 +32,20 @@ import jax.numpy as jnp
 import numpy as np
 
 
+def _path_part(p) -> str:
+    # DictKey -> .key, SequenceKey -> .idx, GetAttrKey (registered
+    # dataclasses: EngineState, WalkStore, StreamingGraph) -> .name
+    for attr in ("key", "idx", "name"):
+        if hasattr(p, attr):
+            return str(getattr(p, attr))
+    return str(p)
+
+
 def _leaf_paths(tree) -> Dict[str, Any]:
     flat = jax.tree_util.tree_flatten_with_path(tree)[0]
     out = {}
     for path, leaf in flat:
-        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
-                       for p in path)
+        key = "/".join(_path_part(p) for p in path)
         out[key] = leaf
     return out
 

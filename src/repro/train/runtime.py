@@ -53,6 +53,12 @@ class TrainLoop:
     ckpt_every: int = 50
     straggler: StragglerMonitor = field(default_factory=StragglerMonitor)
     seed: int = 0
+    # restore hook: (state, step) -> state. Lets stateful step closures
+    # re-sync host-side mirrors from restored device state — the downstream
+    # trainer uses it to hand the restored (EngineState, params, opt) carry
+    # back to its EmbeddingMaintainer so streaming + training resume
+    # together (launch/train.py).
+    on_restore: Optional[Callable] = None
 
     def resume(self, init_state, shardings=None):
         """Restore the latest committed checkpoint, or start fresh."""
@@ -60,6 +66,8 @@ class TrainLoop:
         if step is None:
             return init_state, 0
         state, step = self.ckpt.restore(init_state, shardings=shardings)
+        if self.on_restore is not None:
+            state = self.on_restore(state, step)
         return state, step + 1
 
     def run(self, state, start_step: int, num_steps: int,

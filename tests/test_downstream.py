@@ -1,0 +1,336 @@
+"""Downstream subsystem tests (DESIGN.md §7): the co-scheduled
+EmbeddingMaintainer must leave a BIT-identical walk engine state to the
+plain streaming driver, train only affected-walk pairs, resume streaming +
+training together from one checkpoint, and reach full-retrain downstream
+quality within the documented tolerance (statistical, seeded — the same
+contract BENCH_FRESHNESS.json records)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import StreamingGraph, WalkConfig, generate_corpus
+from repro.core.baselines import IIEngine, TreeEngine
+from repro.core.update import WalkEngine
+from repro.data.streams import cora_like, mixed_edge_stream, rmat_edges
+from repro.downstream import EmbeddingMaintainer, MaintainerConfig
+from repro.models.embeddings import (SGNSConfig, affected_pairs,
+                                     logistic_eval, n_window_pairs,
+                                     sgns_init, train_epoch,
+                                     window_pair_index, window_pairs)
+from repro.serve.walk_queries import WalkQueryService
+from repro.train.checkpoint import CheckpointManager
+
+U32 = jnp.uint32
+
+LOG2_N = 6
+N = 2 ** LOG2_N
+
+
+def make_graph_store(seed=0, n_w=2, length=8):
+    src, dst = rmat_edges(jax.random.PRNGKey(seed), 300, LOG2_N)
+    g = StreamingGraph.from_edges(src, dst, N, 4096)
+    cfg = WalkConfig(n_walks_per_vertex=n_w, length=length)
+    store = generate_corpus(jax.random.PRNGKey(seed + 1), g, cfg)
+    return g, store, cfg
+
+
+def make_maintainer(seed=0, n_w=2, length=8, policy="on-demand",
+                    max_pending=3, **kw):
+    g, store, wcfg = make_graph_store(seed, n_w, length)
+    cfg = MaintainerConfig(walk=wcfg, n_vertices=N, dim=16, window=2,
+                           n_negative=3, rewalk_capacity=N * n_w,
+                           max_pending=max_pending, merge_policy=policy,
+                           **kw)
+    return EmbeddingMaintainer(graph=g, store=store, cfg=cfg,
+                               key=jax.random.PRNGKey(seed + 2))
+
+
+def make_stream(seed=7, n_batches=5, n_ins=10, n_del=4):
+    return mixed_edge_stream(jax.random.PRNGKey(seed), n_batches, n_ins,
+                             n_del, LOG2_N)
+
+
+def assert_stores_identical(s1, s2):
+    for f in ("owner", "code", "epoch", "offsets", "slot_epoch", "packed",
+              "widths"):
+        np.testing.assert_array_equal(np.asarray(getattr(s1, f)),
+                                      np.asarray(getattr(s2, f)), err_msg=f)
+
+
+# ------------------------------------------- co-scheduling leaves walks exact
+
+
+@pytest.mark.parametrize("policy", ["on-demand", "eager"])
+def test_maintainer_engine_bit_identical(policy):
+    """Maintaining embeddings alongside a stream must not perturb the walk
+    engine: same update keys => bit-identical store vs the plain driver."""
+    mt = make_maintainer(policy=policy)
+    g, store, wcfg = make_graph_store()
+    eng = WalkEngine(graph=g, store=store, cfg=wcfg, merge_policy=policy,
+                     rewalk_capacity=N * 2, max_pending=3)
+    ins_s, ins_d, del_s, del_d = make_stream()
+    key = jax.random.PRNGKey(42)
+    metrics = mt.run_stream(key, ins_s, ins_d, del_s, del_d)
+    affected = eng.run_stream(key, ins_s, ins_d, del_s, del_d)
+
+    view = mt.engine_view()
+    np.testing.assert_array_equal(np.asarray(view.graph.codes),
+                                  np.asarray(eng.graph.codes))
+    np.testing.assert_array_equal(np.asarray(metrics.n_affected),
+                                  np.asarray(affected))
+    view.merge()
+    eng.merge()
+    assert_stores_identical(view.store, eng.store)
+    # and the embeddings actually trained
+    assert float(jnp.abs(mt.embeddings).sum()) > 0.0
+    assert mt.pairs_trained == int(np.asarray(metrics.n_pairs).sum())
+
+
+def test_per_batch_step_matches_run_stream():
+    """The per-batch maintainer driver == the scan driver (same keys)."""
+    mt1 = make_maintainer()
+    mt2 = make_maintainer()
+    ins_s, ins_d, del_s, del_d = make_stream(n_batches=4)
+    key = jax.random.PRNGKey(9)
+    tkey = jax.random.PRNGKey(99)
+    m = mt1.run_stream(key, ins_s, ins_d, del_s, del_d, train_key=tkey)
+    uks = jax.random.split(key, 4)
+    tks = jax.random.split(tkey, 4)
+    losses = []
+    for i in range(4):
+        mi = mt2.step(uks[i], tks[i], ins_s[i], ins_d[i], del_s[i], del_d[i])
+        losses.append(float(mi.loss_sum))
+    np.testing.assert_allclose(np.asarray(m.loss_sum), np.asarray(losses),
+                               rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(mt1.embeddings),
+                                  np.asarray(mt2.embeddings))
+    v1, v2 = mt1.engine_view(), mt2.engine_view()
+    v1.merge(), v2.merge()
+    assert_stores_identical(v1.store, v2.store)
+
+
+# --------------------------------------------------- affected-only training
+
+
+def test_trains_only_affected_pairs():
+    """Per step, trained pairs are bounded by the affected walks' windows."""
+    mt = make_maintainer()
+    ppw = mt.cfg.pairs_per_walk
+    ins_s, ins_d, del_s, del_d = make_stream(n_batches=5)
+    m = mt.run_stream(jax.random.PRNGKey(4), ins_s, ins_d, del_s, del_d)
+    n_pairs = np.asarray(m.n_pairs)
+    n_aff = np.asarray(m.n_affected)
+    assert (n_pairs <= n_aff * ppw).all()
+    assert (n_pairs > 0).any()
+    # the incremental point: far fewer pairs than full-corpus retraining
+    full_pairs = mt.engine_state.store.n_walks * ppw
+    assert n_pairs.max() <= full_pairs
+
+
+def test_max_pairs_budget():
+    """The pair budget bounds training work (lane-level subsample) without
+    perturbing the co-scheduled engine state."""
+    mt = make_maintainer(max_pairs=64)
+    assert mt.cfg.pair_batch == 64
+    ins_s, ins_d, del_s, del_d = make_stream(n_batches=3)
+    key = jax.random.PRNGKey(13)
+    m = mt.run_stream(key, ins_s, ins_d, del_s, del_d)
+    n_pairs = np.asarray(m.n_pairs)
+    assert (n_pairs <= 64).all() and (n_pairs > 0).all()
+    mt2 = make_maintainer()  # unbudgeted twin, same update keys
+    mt2.run_stream(key, ins_s, ins_d, del_s, del_d)
+    v1, v2 = mt.engine_view(), mt2.engine_view()
+    v1.merge(), v2.merge()
+    assert_stores_identical(v1.store, v2.store)
+
+
+def test_affected_pairs_masking():
+    """Lane and stale-prefix (vskip) masking of the pure pair extraction."""
+    length, window = 6, 2
+    walks = jnp.arange(2 * length, dtype=U32).reshape(2, length)
+    lane_valid = jnp.asarray([True, False])
+    p_min = jnp.asarray([4, 0], jnp.int32)
+    c, x, m = affected_pairs(walks, lane_valid, p_min, window,
+                             skip_stale_prefix=True)
+    ppw = n_window_pairs(length, window)
+    assert c.shape == (2 * ppw,)
+    m2 = np.asarray(m).reshape(2, ppw)
+    assert not m2[1].any()                      # invalid lane fully masked
+    # walk 0: only windows touching positions >= 4 survive
+    c_pos, x_pos = window_pair_index(length, window)
+    keep = np.asarray(jnp.maximum(c_pos, x_pos)) >= 4
+    np.testing.assert_array_equal(m2[0], keep)
+    # without the vskip filter every valid-lane pair is live
+    _, _, m_all = affected_pairs(walks, lane_valid, p_min, window,
+                                 skip_stale_prefix=False)
+    m_all2 = np.asarray(m_all).reshape(2, ppw)
+    assert m_all2[0].all() and not m_all2[1].any()
+    # pair values agree with the legacy extraction (as a set, p_min=0)
+    c0, x0 = window_pairs(walks[:1], window)
+    got = set(zip(np.asarray(c).reshape(2, ppw)[0].tolist(),
+                  np.asarray(x).reshape(2, ppw)[0].tolist()))
+    want = set(zip(np.asarray(c0).tolist(), np.asarray(x0).tolist()))
+    assert got == want
+
+
+def test_run_stream_masks_expose_affected_sets():
+    """WalkEngine.run_stream(return_masks=True): per-step UpdateAux."""
+    g, store, wcfg = make_graph_store()
+    eng = WalkEngine(graph=g, store=store, cfg=wcfg,
+                     rewalk_capacity=N * 2, max_pending=3)
+    ins_s, ins_d, del_s, del_d = make_stream(n_batches=4)
+    affected, aux = eng.run_stream(jax.random.PRNGKey(5), ins_s, ins_d,
+                                   del_s, del_d, return_masks=True)
+    affected = np.asarray(affected)
+    lv = np.asarray(aux.lane_valid)
+    ids = np.asarray(aux.walk_ids)
+    pm = np.asarray(aux.p_min)
+    assert lv.shape == (4, N * 2) and ids.shape == (4, N * 2)
+    np.testing.assert_array_equal(lv.sum(axis=1), affected)
+    n_walks = eng.store.n_walks
+    for b in range(4):
+        valid_ids = ids[b][lv[b]]
+        assert (valid_ids < n_walks).all()
+        assert len(set(valid_ids.tolist())) == len(valid_ids)  # unique
+        assert (pm[b][lv[b]] < wcfg.length).all()
+
+
+# ------------------------------------------------- checkpoint: resume both
+
+
+def test_checkpoint_resumes_streaming_and_training(tmp_path):
+    """One checkpoint carries (EngineState, params, opt): a restored
+    maintainer continues bit-identically to an uninterrupted one."""
+    ins_s, ins_d, del_s, del_d = make_stream(n_batches=4)
+    uks = jax.random.split(jax.random.PRNGKey(11), 4)
+    tks = jax.random.split(jax.random.PRNGKey(12), 4)
+
+    ref = make_maintainer()
+    for i in range(4):
+        ref.step(uks[i], tks[i], ins_s[i], ins_d[i], del_s[i], del_d[i])
+
+    mt = make_maintainer()
+    for i in range(2):
+        mt.step(uks[i], tks[i], ins_s[i], ins_d[i], del_s[i], del_d[i])
+    ckpt = CheckpointManager(str(tmp_path))
+    ckpt.save(1, mt.state, blocking=True)
+
+    mt2 = make_maintainer()  # fresh process stand-in (template state)
+    restored, step = ckpt.restore(mt2.state)
+    assert step == 1
+    mt2.load_state(restored)
+    assert mt2.epoch_counter == 2
+    assert mt2._n_pending_host == mt._n_pending_host
+    for i in range(2, 4):
+        mt2.step(uks[i], tks[i], ins_s[i], ins_d[i], del_s[i], del_d[i])
+
+    np.testing.assert_array_equal(np.asarray(mt2.embeddings),
+                                  np.asarray(ref.embeddings))
+    v1, v2 = ref.engine_view(), mt2.engine_view()
+    v1.merge(), v2.merge()
+    assert_stores_identical(v1.store, v2.store)
+    assert int(mt2.state.opt["step"]) == 4
+    assert mt2.pairs_trained == ref.pairs_trained
+
+
+# ------------------------------------------------ incremental == full (stat)
+
+
+def test_incremental_matches_full_retrain():
+    """Affected-only training on a Cora-like stream reaches the full-retrain
+    downstream metric within tolerance (seeded; the BENCH_FRESHNESS
+    contract: quality_gap_tolerance = 0.10)."""
+    n, n_w, length = 128, 6, 10
+    key = jax.random.PRNGKey(0)
+    (src, dst), labels, _ = cora_like(key, n_vertices=n, n_edges=n * 4,
+                                      n_classes=5)
+    labels_np = np.asarray(labels)
+    snapshots, n_batches, batch_edges = 2, 3, 12
+    n0 = src.shape[0] - snapshots * n_batches * batch_edges
+    wcfg = WalkConfig(n_walks_per_vertex=n_w, length=length)
+    scfg = SGNSConfig(n_vertices=n, dim=32, window=3, n_negative=4)
+
+    def retrain(walks, seed, epochs=4):
+        p = sgns_init(jax.random.PRNGKey(seed), scfg)
+        k = jax.random.PRNGKey(seed)
+        for _ in range(epochs):
+            k, kk = jax.random.split(k)
+            p, _ = train_epoch(kk, p, walks, scfg, batch=2048)
+        return p
+
+    g = StreamingGraph.from_edges(src[:n0], dst[:n0], n, edge_capacity=8192)
+    store = generate_corpus(jax.random.PRNGKey(1), g, wcfg)
+    mcfg = MaintainerConfig(walk=wcfg, n_vertices=n, dim=32, window=3,
+                            n_negative=4, rewalk_capacity=n * n_w, lr=0.002)
+    mt = EmbeddingMaintainer(graph=g, store=store, cfg=mcfg,
+                             key=jax.random.PRNGKey(2))
+    warm = retrain(mt.engine_view().walk_matrix(), seed=3)
+    mt.state = mt.state._replace(params=jax.tree.map(jnp.asarray, warm))
+
+    pairs_inc = 0
+    for snap in range(snapshots):
+        lo = n0 + snap * n_batches * batch_edges
+        ins_s = src[lo:lo + n_batches * batch_edges].reshape(n_batches,
+                                                             batch_edges)
+        ins_d = dst[lo:lo + n_batches * batch_edges].reshape(n_batches,
+                                                             batch_edges)
+        m = mt.run_stream(jax.random.fold_in(key, 10 + snap), ins_s, ins_d)
+        pairs_inc += int(np.asarray(m.n_pairs).sum())
+    assert not mt.mav_overflowed
+
+    acc_inc = logistic_eval(np.asarray(mt.embeddings, np.float32), labels_np)
+    full = retrain(mt.engine_view().walk_matrix(), seed=100)
+    acc_full = logistic_eval(np.asarray(full["in"], np.float32), labels_np)
+    assert acc_inc >= acc_full - 0.10, (acc_inc, acc_full)
+    # and it earned that quality incrementally: fewer pairs than ONE full
+    # retrain pass over the final corpus
+    full_pairs = 4 * window_pairs(mt.engine_view().walk_matrix(),
+                                  3)[0].shape[0]
+    assert pairs_inc < full_pairs
+
+
+# ----------------------------------------------------- serving + baselines
+
+
+def test_embedding_neighbors_serving():
+    mt = make_maintainer()
+    ins_s, ins_d, del_s, del_d = make_stream(n_batches=3)
+    mt.run_stream(jax.random.PRNGKey(6), ins_s, ins_d, del_s, del_d)
+    svc = WalkQueryService(engine=mt.engine_view())
+    with pytest.raises(ValueError, match="no embedding table"):
+        svc.embedding_neighbors(0)
+    table = np.asarray(mt.embeddings).copy()
+    table[7] = table[3]  # vertex 7 := clone of 3 -> mutual top neighbors
+    svc.set_embedding_table(table)
+    ids, scores = svc.embedding_neighbors(jnp.asarray([3, 7]), k=5)
+    assert ids.shape == (2, 5) and scores.shape == (2, 5)
+    assert int(ids[0, 0]) == 7 and int(ids[1, 0]) == 3
+    assert not (np.asarray(ids) == np.asarray([[3], [7]])).any()  # no self
+    s = np.asarray(scores)
+    assert (np.diff(s, axis=1) <= 1e-6).all()  # descending
+
+
+@pytest.mark.parametrize("engine_cls", [IIEngine, TreeEngine])
+def test_baselines_accept_stacked_streams(engine_cls):
+    """Baseline run_stream == per-batch replay with the same key split
+    (the WalkEngine.run_stream key contract)."""
+    g, _, wcfg = make_graph_store()
+    e1 = engine_cls.create(jax.random.PRNGKey(1), g, wcfg)
+    e2 = engine_cls.create(jax.random.PRNGKey(1), g, wcfg)
+    e1.rewalk_capacity = e2.rewalk_capacity = N * 2
+    ins_s, ins_d, del_s, del_d = make_stream(n_batches=4)
+    key = jax.random.PRNGKey(8)
+    aff = e1.run_stream(key, ins_s, ins_d, del_s, del_d)
+    keys = jax.random.split(key, 4)
+    aff2 = [e2.update_batch(keys[i], ins_s[i], ins_d[i], del_s[i], del_d[i])
+            for i in range(4)]
+    np.testing.assert_array_equal(np.asarray(aff), np.asarray(aff2))
+    if engine_cls is IIEngine:
+        np.testing.assert_array_equal(np.asarray(e1.walks),
+                                      np.asarray(e2.walks))
+    else:
+        for f in ("owner", "walk", "pos", "nxt"):
+            np.testing.assert_array_equal(np.asarray(getattr(e1, f)),
+                                          np.asarray(getattr(e2, f)),
+                                          err_msg=f)

@@ -1,0 +1,157 @@
+"""SGNS kernel gradient checks + backend-registry contract (DESIGN.md §7).
+
+The closed-form du/dvp/dvn of kernels/sgns.py is verified against `jax.grad`
+of the reference loss on every backend servable on CPU, and the backends are
+checked against each other: losses bit-agree ("interpret" vs "xla-ref" vs
+"pallas-interpret"); gradients agree to float32 ULP tolerance (AD and the
+closed form contract the same math through different fusion orders).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import sgns
+from repro.models.embeddings import masked_sgns_step, sgns_loss
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+# backends servable on CPU ("pallas" resolves to "interpret" off-TPU and is
+# exercised via the resolution test below)
+CPU_BACKENDS = ("interpret", "xla-ref", "pallas-interpret")
+
+
+def make_inputs(b=16, k=4, d=128, seed=0):
+    kk = jax.random.PRNGKey(seed)
+    u = jax.random.normal(jax.random.fold_in(kk, 1), (b, d), F32)
+    vp = jax.random.normal(jax.random.fold_in(kk, 2), (b, d), F32)
+    vn = jax.random.normal(jax.random.fold_in(kk, 3), (b, k, d), F32)
+    return u, vp, vn
+
+
+# ------------------------------------------------------- gradient checks
+
+
+@pytest.mark.parametrize("backend", CPU_BACKENDS)
+def test_grads_match_jax_grad(backend):
+    """du/dvp/dvn == jax.grad of the reference summed loss, per backend."""
+    u, vp, vn = make_inputs()
+    loss, du, dvp, dvn = sgns.sgns_apply(u, vp, vn, backend)
+    ref_loss = sgns.sgns_reference_loss(u, vp, vn)
+    g_du, g_dvp, g_dvn = jax.grad(
+        lambda *a: jnp.sum(sgns.sgns_reference_loss(*a)), argnums=(0, 1, 2)
+    )(u, vp, vn)
+    np.testing.assert_allclose(np.asarray(loss), np.asarray(ref_loss),
+                               rtol=1e-6)
+    for name, got, want in (("du", du, g_du), ("dvp", dvp, g_dvp),
+                            ("dvn", dvn, g_dvn)):
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-4, atol=1e-5, err_msg=name)
+
+
+@pytest.mark.parametrize("shape", [(8, 3, 32), (24, 1, 64), (16, 5, 128)])
+def test_interpret_shape_flexible(shape):
+    """The XLA kernel-math backend has no tile-shape constraints."""
+    b, k, d = shape
+    u, vp, vn = make_inputs(b, k, d, seed=3)
+    loss, du, dvp, dvn = sgns.sgns_apply(u, vp, vn, "interpret")
+    assert loss.shape == (b,) and du.shape == (b, d)
+    assert dvn.shape == (b, k, d)
+    assert bool(jnp.all(jnp.isfinite(loss)))
+
+
+# ------------------------------------------------- cross-backend agreement
+
+
+def test_interpret_vs_xla_ref_bit_agreement():
+    """Losses bit-identical; grads within float32 ULPs (documented: AD
+    accumulates the pos/neg contributions in a different fusion order)."""
+    u, vp, vn = make_inputs(b=32, k=5, d=96, seed=1)
+    li, dui, dvpi, dvni = sgns.sgns_apply(u, vp, vn, "interpret")
+    lr_, dur, dvpr, dvnr = sgns.sgns_apply(u, vp, vn, "xla-ref")
+    np.testing.assert_array_equal(np.asarray(li), np.asarray(lr_))
+    for name, a, b in (("du", dui, dur), ("dvp", dvpi, dvpr),
+                       ("dvn", dvni, dvnr)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-5, err_msg=name)
+
+
+def test_pallas_interpret_matches_interpret():
+    """pl.pallas_call(interpret=True) == the same kernel math in XLA: the
+    8-row tiling is bit-transparent for the row-independent outputs."""
+    u, vp, vn = make_inputs(b=16, k=4, d=128, seed=2)
+    lp, dup, dvpp, dvnp = sgns.sgns_apply(u, vp, vn, "pallas-interpret")
+    li, dui, dvpi, dvni = sgns.sgns_apply(u, vp, vn, "interpret")
+    np.testing.assert_array_equal(np.asarray(lp), np.asarray(li))
+    np.testing.assert_array_equal(np.asarray(dvpp), np.asarray(dvpi))
+    np.testing.assert_array_equal(np.asarray(dvnp), np.asarray(dvni))
+    np.testing.assert_allclose(np.asarray(dup), np.asarray(dui),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_pallas_tiling_contract():
+    """An EXPLICIT kernel-backend request on tiling-violating shapes
+    (B % 8, D % 128) must raise — never silently validate the fallback;
+    only the auto path is allowed to downgrade to "interpret"."""
+    u, vp, vn = make_inputs(b=10, k=2, d=48, seed=7)
+    with pytest.raises(ValueError, match="requires B % 8"):
+        sgns.sgns_apply(u, vp, vn, "pallas-interpret")
+    # auto path on these shapes serves the untiled math fine
+    loss, *_ = sgns.sgns_apply(u, vp, vn, None)
+    assert loss.shape == (10,)
+
+
+# ------------------------------------------------------- registry contract
+
+
+def test_registry_resolution():
+    on_tpu = jax.default_backend() == "tpu"
+    assert sgns.resolve_backend(None) == ("pallas" if on_tpu else "interpret")
+    assert sgns.resolve_backend("pallas") == (
+        "pallas" if on_tpu else "interpret")
+    assert sgns.resolve_backend("xla-ref") == "xla-ref"
+    with pytest.raises(ValueError, match="unknown sgns backend"):
+        sgns.resolve_backend("nope")
+    sgns.set_default_backend("xla-ref")
+    try:
+        assert sgns.get_default_backend() == "xla-ref"
+    finally:
+        sgns.set_default_backend(None)
+    with pytest.raises(ValueError, match="unknown sgns backend"):
+        sgns.set_default_backend("nope")
+
+
+# ------------------------------------------- masked step == grad-of-subset
+
+
+def test_masked_step_equals_grad_of_masked_loss():
+    """masked_sgns_step's scatter-add == SGD on the mask's pair subset."""
+    n, d, b, k = 20, 32, 24, 3
+    kk = jax.random.PRNGKey(5)
+    params = {
+        "in": jax.random.normal(jax.random.fold_in(kk, 1), (n, d), F32),
+        "out": jax.random.normal(jax.random.fold_in(kk, 2), (n, d), F32),
+    }
+    centers = jax.random.randint(jax.random.fold_in(kk, 3), (b,), 0, n, I32)
+    contexts = jax.random.randint(jax.random.fold_in(kk, 4), (b,), 0, n, I32)
+    negs = jax.random.randint(jax.random.fold_in(kk, 5), (b, k), 0, n, I32)
+    mask = jnp.arange(b) % 3 != 0
+    lr = 0.05
+
+    new, loss_sum, n_pairs = masked_sgns_step(
+        params, centers, contexts, negs, mask, lr, backend="interpret")
+
+    sub = jnp.nonzero(mask)[0]
+    grads = jax.grad(sgns_loss)(params, centers[sub], contexts[sub],
+                                negs[sub])
+    want = jax.tree.map(lambda p, g: p - lr * g, params, grads)
+    np.testing.assert_allclose(np.asarray(new["in"]),
+                               np.asarray(want["in"]), rtol=2e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(new["out"]),
+                               np.asarray(want["out"]), rtol=2e-4, atol=1e-5)
+    assert int(n_pairs) == int(mask.sum())
+    ref = sgns.sgns_reference_loss(params["in"][centers[sub]],
+                                   params["out"][contexts[sub]],
+                                   params["out"][negs[sub]])
+    np.testing.assert_allclose(float(loss_sum), float(ref.sum()), rtol=1e-5)
