@@ -30,8 +30,8 @@ import jax
 
 from benchmarks import common
 from benchmarks.common import (BenchGraph, DEFAULT_CFG, build_engines,
-                               build_graph, emit, update_throughput,
-                               write_json)
+                               build_graph, emit, merge_json,
+                               update_throughput)
 from repro.core import WalkConfig, generate_corpus
 from repro.core.update import WalkEngine
 from repro.data.streams import edge_batch_stream
@@ -170,7 +170,9 @@ def pipelined_vs_per_batch(seed: int = 17):
                 "dispatch-bound regime is where accelerator deployments "
                 "of the paper's 10k-edge batches sit",
     }
-    write_json("BENCH_THROUGHPUT.json", results)
+    # merge (not write): bench_walk.py records its order-2 sampler
+    # comparison into the same BENCH_THROUGHPUT.json under its own key
+    merge_json("BENCH_THROUGHPUT.json", results)
     return results
 
 

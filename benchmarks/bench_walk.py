@@ -1,0 +1,141 @@
+"""Order-2 SAMPLENEXT sampler comparison: K-trial rejection vs the exact
+factorized (kernels/intersect.py) sampler on the scan-pipelined streaming
+driver (DESIGN.md §8).
+
+Both engines consume IDENTICAL node2vec edge streams (same PRNG keys) via
+`WalkEngine.run_stream`; the samplers differ only inside SAMPLENEXT. The
+rejection sampler runs n_trials proposal rounds per walk step — each a CSR
+gather + binary-search `has_edge` over the full edge array — while the
+factorized sampler does one neighbor-window intersection + rank-select and
+is exact. Results land in BENCH_THROUGHPUT.json under "order2_samplers"
+(merged alongside bench_throughput's driver comparison); the acceptance bar
+is factorized >= rejection updates/s on the dispatch-bound cell.
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+# standalone invocation (`python benchmarks/bench_walk.py --smoke`):
+# mirror run.py's path bootstrap
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for _p in (_ROOT, os.path.join(_ROOT, "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
+
+import jax
+
+from benchmarks import common
+from benchmarks.common import BenchGraph, emit, merge_json
+from repro.core import StreamingGraph, WalkConfig, generate_corpus
+from repro.core.update import WalkEngine
+from repro.core.walkers import WalkModel
+from repro.data.streams import edge_batch_stream, rmat_edges
+
+# Same two regimes as bench_throughput (the drivers' workloads), but with
+# order-2 walk models — the sampler sits inside every re-walk step, so the
+# dispatch-bound cell measures the per-step op-count win (the accelerator
+# bet: the factorized path has no K-round trial scan to dispatch) and the
+# compute-bound cell measures raw sampling math throughput on CPU.
+WORKLOADS = {
+    "dispatch-bound": dict(
+        bg=BenchGraph(log2_n=6, n_edges=150), edge_capacity=1024,
+        n_w=1, length=5, dmax=32, n_batches=64, batch_edges=16),
+    "compute-bound": dict(
+        bg=BenchGraph(log2_n=8, n_edges=2_000), edge_capacity=None,
+        n_w=2, length=10, dmax=128, n_batches=32, batch_edges=200),
+}
+
+P, Q = 0.5, 2.0
+
+
+def _engine(spec: dict, sampler: str, seed: int = 0) -> WalkEngine:
+    bg = spec["bg"]
+    cap = spec["edge_capacity"]
+    if cap is None:
+        cap = 2 * (2 * bg.n_edges + 64 * bg.n)
+    src, dst = rmat_edges(jax.random.PRNGKey(seed), bg.n_edges, bg.log2_n,
+                          bg.a, bg.b, bg.c, bg.d)
+    g = StreamingGraph.from_edges(src, dst, bg.n, edge_capacity=cap)
+    model = WalkModel(order=2, p=P, q=Q, sampler=sampler, dmax=spec["dmax"])
+    cfg = WalkConfig(n_walks_per_vertex=spec["n_w"], length=spec["length"],
+                     model=model)
+    store = generate_corpus(jax.random.PRNGKey(seed + 1), g, cfg)
+    capacity = min(bg.n * cfg.n_walks_per_vertex, 1 << 13)
+    return WalkEngine(graph=g, store=store, cfg=cfg,
+                      merge_policy="on-demand", rewalk_capacity=capacity,
+                      mav_capacity=min(store.size, 1 << 17))
+
+
+def _time_stream(engine: WalkEngine, key, src, dst) -> float:
+    t0 = time.perf_counter()
+    engine.run_stream(key, src, dst)
+    jax.block_until_ready(engine.store.code)
+    return time.perf_counter() - t0
+
+
+def _bench_workload(wname: str, spec: dict, seed: int = 23,
+                    repeats: int = 3) -> dict:
+    bg = spec["bg"]
+    n_batches, batch_edges = spec["n_batches"], spec["batch_edges"]
+    if common.SMOKE:
+        n_batches = min(n_batches, 8)
+        repeats = 1
+    key = jax.random.PRNGKey(seed)
+    src, dst = edge_batch_stream(key, n_batches, batch_edges, bg.log2_n,
+                                 bg.a, bg.b, bg.c, bg.d)
+    out = {"n_batches": n_batches, "batch_edges": batch_edges,
+           "graph": {"log2_n": bg.log2_n, "n_edges": bg.n_edges},
+           "walks": {"n_w": spec["n_w"], "l": spec["length"],
+                     "p": P, "q": Q, "dmax": spec["dmax"]},
+           "samplers": {}}
+    for sampler in ("rejection", "factorized"):
+        _time_stream(_engine(spec, sampler, seed), key, src, dst)  # compile
+        eng = _engine(spec, sampler, seed)
+        t = _time_stream(eng, key, src, dst)
+        for _ in range(repeats - 1):
+            t = min(t, _time_stream(_engine(spec, sampler, seed), key, src,
+                                    dst))
+        assert not eng.mav_overflowed, \
+            "MAV gather capacity overflow — resize mav_capacity"
+        ups = n_batches / t
+        aff = eng.total_affected
+        out["samplers"][sampler] = {
+            "updates_per_s": round(ups, 2), "total_s": round(t, 5),
+            "affected_walks_total": int(aff),
+            "walks_per_s": round(aff / t, 1)}
+        emit(f"order2_samplers/{wname}/{sampler}", 1e6 * t / n_batches,
+             f"updates_per_s={ups:.1f}")
+    ups_r = out["samplers"]["rejection"]["updates_per_s"]
+    ups_f = out["samplers"]["factorized"]["updates_per_s"]
+    out["factorized_speedup"] = round(ups_f / ups_r, 2)
+    return out
+
+
+def run(seed: int = 23):
+    """Record the order-2 sampler comparison into BENCH_THROUGHPUT.json
+    (key "order2_samplers"), both workload regimes."""
+    results = {"backend": jax.default_backend(), "workloads": {}}
+    for wname, spec in WORKLOADS.items():
+        results["workloads"][wname] = _bench_workload(wname, spec, seed)
+    results["note"] = (
+        "identical order-2 node2vec streams per cell (same keys); "
+        "'rejection' = K-trial accept-first SAMPLENEXT (residual bias "
+        "< (1-amin/amax)^K), 'factorized' = exact BINGO-style group "
+        "sampler (kernels/intersect.py); acceptance: factorized >= "
+        "rejection updates/s on the dispatch-bound cell")
+    merge_json("BENCH_THROUGHPUT.json", {"order2_samplers": results})
+    return results
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="quick mode: fewer batches/repeats (results land "
+                         "in BENCH_THROUGHPUT.smoke.json)")
+    args = ap.parse_args()
+    if args.smoke:
+        common.SMOKE = True
+    run()

@@ -35,19 +35,42 @@ def emit(name: str, us_per_call: float, derived: str = ""):
     print(row, flush=True)
 
 
-def write_json(filename: str, payload: dict):
-    """Record a benchmark's structured results as BENCH_*.json at repo root.
-
-    Smoke runs write to *.smoke.json (gitignored) so the committed full-mode
-    acceptance artifacts are never clobbered by a quick local/CI run."""
+def _bench_path(filename: str) -> str:
+    """Resolved BENCH_*.json path: smoke runs redirect to *.smoke.json
+    (gitignored) so the committed full-mode acceptance artifacts are never
+    clobbered by a quick local/CI run. The single source of that naming —
+    write_json and merge_json must agree on it."""
     if SMOKE:
         stem, ext = os.path.splitext(filename)
         filename = f"{stem}.smoke{ext}"
-    path = os.path.join(_REPO_ROOT, filename)
+    return os.path.join(_REPO_ROOT, filename)
+
+
+def write_json(filename: str, payload: dict):
+    """Record a benchmark's structured results as BENCH_*.json at repo root
+    (smoke-aware, see _bench_path)."""
+    path = _bench_path(filename)
     with open(path, "w") as f:
         json.dump(payload, f, indent=2, sort_keys=True)
         f.write("\n")
     print(f"# wrote {path}", flush=True)
+
+
+def merge_json(filename: str, updates: dict):
+    """Update top-level keys of a BENCH_*.json shared by several modules
+    (e.g. BENCH_THROUGHPUT.json carries the driver comparison from
+    bench_throughput AND the order-2 sampler comparison from bench_walk) —
+    each writer replaces only its own keys, whichever runs first/last."""
+    path = _bench_path(filename)
+    payload = {}
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                payload = json.load(f)
+        except (OSError, json.JSONDecodeError):
+            payload = {}
+    payload.update(updates)
+    write_json(filename, payload)
 
 
 def timeit(fn: Callable, repeats: int = 3) -> float:

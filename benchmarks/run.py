@@ -18,6 +18,7 @@ from benchmarks import common  # noqa: E402
 
 MODULES = [
     "bench_throughput",   # Fig 6 + Fig 7
+    "bench_walk",         # order-2 samplers: rejection vs factorized (§8)
     "bench_memory",       # Fig 8 + §7.5 DE + id distribution
     "bench_scaling",      # Fig 9 + Fig 10
     "bench_skew",         # Fig 11
@@ -30,7 +31,7 @@ MODULES = [
 ]
 
 
-SMOKE_MODULES = ["bench_memory", "bench_search"]
+SMOKE_MODULES = ["bench_memory", "bench_search", "bench_walk"]
 
 
 def main() -> None:

@@ -24,6 +24,12 @@ class WharfStreamConfig:
     rewalk_capacity: int = 1 << 20     # affected-walk bound per batch
     chunk_b: int = 128
     order: int = 1
+    # order-2 SAMPLENEXT backend (DESIGN.md §8): "rejection" is the K-trial
+    # approximate sampler; "factorized" is the exact BINGO-style group
+    # sampler (kernels/intersect.py) with `sampler_dmax`-wide neighbor
+    # windows (per-lane rejection fallback above dmax).
+    sampler: str = "rejection"
+    sampler_dmax: int = 128
     # scan-pipelined streaming driver (DESIGN.md §5): batches consumed per
     # jitted `run_stream` scan, and the pending-buffer depth before the
     # in-scan forced merge
@@ -34,19 +40,34 @@ class WharfStreamConfig:
     # the interpreted kernel math; "xla-ref" is the legacy while-loop.
     find_next_backend: str = "auto"
     find_next_window: int = 8          # K candidate chunks per query
+    # intersect (factorized-sampler) backend registry selection: same
+    # resolution rules as find_next_backend (DESIGN.md §8)
+    intersect_backend: str = "auto"
 
     def walk_config(self) -> WalkConfig:
         return WalkConfig(n_walks_per_vertex=self.n_walks_per_vertex,
                           length=self.length,
-                          model=WalkModel(order=self.order),
+                          model=WalkModel(order=self.order,
+                                          sampler=self.sampler,
+                                          dmax=self.sampler_dmax),
                           chunk_b=self.chunk_b)
 
     def select_backend(self) -> str:
-        """Install this config's FINDNEXT backend/window as the process
-        default; returns the concrete backend after hardware resolution."""
+        """Install this config's FINDNEXT + intersect backends as the
+        process defaults; returns the concrete FINDNEXT backend after
+        hardware resolution. "auto" fields leave the corresponding registry
+        untouched (no side effect on backends another component installed —
+        the contract launch/steps relies on)."""
         from repro.core import packed_store
-        packed_store.set_default_backend(self.find_next_backend)
-        packed_store.set_default_window(self.find_next_window)
+        from repro.kernels import intersect
+        if self.find_next_backend != "auto":
+            # the candidate window rides the explicit FINDNEXT choice: an
+            # intersect-only explicit config must not reset another
+            # component's installed window
+            packed_store.set_default_backend(self.find_next_backend)
+            packed_store.set_default_window(self.find_next_window)
+        if self.intersect_backend != "auto":
+            intersect.set_default_backend(self.intersect_backend)
         return packed_store.get_default_backend()
 
 
@@ -79,6 +100,17 @@ WHARF_SHAPES = {
                                        batch_edges=10_000, n_batches=8,
                                        merge_impl="interleave",
                                        merge_policy="eager"),
+    # order-2 streaming cells: the K-trial rejection sampler vs the exact
+    # factorized sampler (DESIGN.md §8) on the same pipelined driver —
+    # `order`/`sampler` override the config fields per shape (launch/steps)
+    "stream_10k_n2v_rejection": dict(kind="walk_stream", batch_edges=10_000,
+                                     n_batches=8, merge_impl="interleave",
+                                     merge_policy="on-demand", order=2,
+                                     sampler="rejection"),
+    "stream_10k_n2v_factorized": dict(kind="walk_stream", batch_edges=10_000,
+                                      n_batches=8, merge_impl="interleave",
+                                      merge_policy="on-demand", order=2,
+                                      sampler="factorized"),
 }
 
 register(ArchSpec(name="wharf-stream", family="wharf", make_config=_wharf,

@@ -25,7 +25,13 @@ scalars. One update is the pure `stream_step`: graph merge -> MAV -> re-walk
 
 Statistical indistinguishability (Property 2): each affected walk is re-walked
 from p_min with fresh PRNG draws against the *updated* graph, exactly the
-policy of §6.2; chi-square tests in tests/ verify the contract.
+policy of §6.2. SAMPLENEXT inside `_rewalk` dispatches on `cfg.model`
+(core/walkers.py): order-2 streams run either the K-trial rejection sampler
+or the exact factorized sampler (kernels/intersect.py) with NO change to
+`EngineState` shapes — so all three drivers, the distributed engine, and the
+downstream maintainer inherit the sampler choice from the config alone. The
+order-2 chi-square harness (tests/test_walk_stats.py, `stats` tier) verifies
+the contract against the exact alpha-weighted transition probabilities.
 """
 from __future__ import annotations
 

@@ -1,18 +1,35 @@
 """Random-walk models (paper §3.2): DeepWalk (1st order) and node2vec (2nd order).
 
-DeepWalk: uniform over current neighbors.
-node2vec(p, q): sampled by rejection (the MH/alias-free scheme used by KnightKing
-and cited in paper Alg. 2's SAMPLENEXT note): propose a uniform neighbor x of v and
-accept with probability alpha(prev, x) / alpha_max where
+DeepWalk: uniform over current neighbors. node2vec(p, q) weighs each neighbor
+x of the current vertex v by the second-order bias
 
-    alpha = 1/p  if x == prev
-            1    if x is a neighbor of prev
-            1/q  otherwise.
+    alpha(prev, x) = 1/p  if x == prev
+                     1    if x is a neighbor of prev
+                     1/q  otherwise
 
-On TPU a data-dependent while_loop per lane would serialize the VPU, so we run a
-fixed number of vectorized trials (accept-first) with a guaranteed fallback to the
-last proposal; with K=8 trials the residual bias is < (1-amin/amax)^8 and the
-statistical-indistinguishability tests (chi-square) pass. Documented in DESIGN.md.
+and two SAMPLENEXT backends implement it (selected by `WalkModel.sampler`;
+DESIGN.md §8, statistical contract tested in tests/test_walk_stats.py):
+
+  * "rejection" (default; the MH/alias-free scheme used by KnightKing and
+    cited in paper Alg. 2's SAMPLENEXT note): propose a uniform neighbor,
+    accept with probability alpha / alpha_max. On TPU a data-dependent
+    while_loop per lane would serialize the VPU, so we run a FIXED number of
+    vectorized trials (accept-first) with the last proposal as fallback.
+    APPROXIMATE: with K trials the residual total-variation bias is bounded
+    by (1 - alpha_min/alpha_max)^K — real and measurable for sharp (p, q)
+    (the order-2 chi-square harness in tests/test_walk_stats.py rejects this
+    sampler's distribution at small K and asserts the bound at K=8).
+
+  * "factorized" — EXACT, BINGO-style (PAPERS.md): alpha takes only three
+    constant values, so the three groups {x == prev}, {x in N(v) ∩ N(prev)},
+    {rest} are sampled by aggregate mass (count x weight) and then uniformly
+    within the chosen group. Group counts come from one neighbor-window
+    intersection |N(v) ∩ N(prev)| + membership-rank select — the Pallas
+    kernel in kernels/intersect.py (four-backend registry, CPU-validated).
+    Two uniform draws, no rejection loop in the hot stream_step path.
+    Windows are `dmax` wide: lanes where deg(v) or deg(prev) exceed dmax
+    fall back to the rejection sampler (lax.cond — the fallback trace runs
+    only when an overflowing lane exists in the batch).
 """
 from __future__ import annotations
 
@@ -22,16 +39,26 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import intersect
+
 U32 = jnp.uint32
+I32 = jnp.int32
 
 
 class WalkModel(NamedTuple):
-    """order=1 -> DeepWalk; order=2 -> node2vec(p, q)."""
+    """order=1 -> DeepWalk; order=2 -> node2vec(p, q).
+
+    sampler: order-2 SAMPLENEXT backend — "rejection" (K-trial, residual
+    bias < (1-amin/amax)^K) or "factorized" (exact group factorization).
+    dmax: factorized neighbor-window width; lanes with deg > dmax fall back
+    to rejection (128 = one VPU lane tile, the kernel-native width)."""
 
     order: int = 1
     p: float = 1.0
     q: float = 1.0
     n_trials: int = 8  # rejection trials for 2nd-order sampling
+    sampler: str = "rejection"   # "rejection" | "factorized"
+    dmax: int = 128              # factorized window width (neighbors)
 
 
 DEEPWALK = WalkModel(order=1)
@@ -66,8 +93,67 @@ def _node2vec_step(key, graph, v, prev, p, q, n_trials):
     return chosen
 
 
+def _neighbor_window(graph, v, dmax: int):
+    """Sentinel-padded neighbor window: (nbrs u32 [B, dmax], deg i32 [B]).
+
+    The first min(deg, dmax) CSR neighbors of each vertex (code-sorted, so
+    each row is sorted — the contract `intersect.member_sorted` needs)."""
+    v = jnp.asarray(v, I32)
+    start = graph.offsets[v]
+    deg = graph.offsets[v + 1] - start
+    idx = start[:, None] + jnp.arange(dmax, dtype=I32)[None]
+    nbrs = graph.neighbors[jnp.clip(idx, 0, graph.codes.shape[0] - 1)]
+    in_win = jnp.arange(dmax, dtype=I32)[None] < jnp.minimum(deg, dmax)[:, None]
+    return jnp.where(in_win, nbrs, intersect.SENT), deg
+
+
+@partial(jax.jit, static_argnames=("p", "q", "n_trials", "dmax", "backend"))
+def _node2vec_factorized_step(key, graph, v, prev, p, q, n_trials, dmax,
+                              backend):
+    """Exact order-2 transition via bias factorization (kernels/intersect).
+
+    Draw discipline: the two factorization uniforms come from one split of
+    `key` and the rejection fallback consumes a DIFFERENT split, so the
+    factorized selection is identical across backends and unperturbed by
+    whether any lane overflowed the window."""
+    b = v.shape[0]
+    k_u, k_fb = jax.random.split(key)
+    u = jax.random.uniform(k_u, (b, 2), dtype=jnp.float32)
+    nbrs_v, deg_v = _neighbor_window(graph, v, dmax)
+    nbrs_p, deg_p = _neighbor_window(graph, prev, dmax)
+    nxt, found = intersect.factorized_next(
+        nbrs_v, nbrs_p, jnp.asarray(prev, U32), u[:, 0], u[:, 1], p, q,
+        backend=backend)
+    nxt = jnp.where(found, nxt, v)  # isolated vertices stay in place
+    overflow = (deg_v > dmax) | (deg_p > dmax)
+
+    def with_fallback(_):
+        rej = _node2vec_step(k_fb, graph, v, prev, p, q, n_trials)
+        return jnp.where(overflow, rej, nxt)
+
+    return jax.lax.cond(jnp.any(overflow), with_fallback, lambda _: nxt,
+                        None)
+
+
 def sample_next(key, graph, v, prev, model: WalkModel):
-    """SAMPLENEXT (paper Alg. 2 line 8), vectorized over a batch of walkers."""
+    """SAMPLENEXT (paper Alg. 2 line 8), vectorized over a batch of walkers.
+
+    Order-2 dispatch is static (model is concrete at trace time): the
+    "factorized" sampler resolves its intersect backend from the registry
+    once per trace (configs/wharf_stream installs the process default)."""
     if model.order == 1:
         return deepwalk_step(key, graph, v)
-    return _node2vec_step(key, graph, v, prev, model.p, model.q, model.n_trials)
+    if model.sampler == "factorized":
+        # forward the RAW registry request (None = auto), not the resolved
+        # backend: an auto pick must keep its shape-aware kernel->interpret
+        # fallback inside factorized_next, while an explicitly installed
+        # kernel backend still raises off-tile
+        backend = intersect.default_backend_request()
+        return _node2vec_factorized_step(key, graph, v, prev, model.p,
+                                         model.q, model.n_trials,
+                                         model.dmax, backend)
+    if model.sampler != "rejection":
+        raise ValueError(f"unknown order-2 sampler {model.sampler!r}; "
+                         f"expected 'rejection' or 'factorized'")
+    return _node2vec_step(key, graph, v, prev, model.p, model.q,
+                          model.n_trials)

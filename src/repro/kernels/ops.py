@@ -10,6 +10,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import delta as _delta
+from repro.kernels import intersect as _intersect
 from repro.kernels import range_search as _rs
 from repro.kernels import sgns as _sgns
 from repro.kernels import szudzik as _szudzik
@@ -76,6 +77,31 @@ def find_next_packed(packed, widths, anchors_hi, anchors_lo, chunk_idx,
 
 
 candidate_chunks = _rs.candidate_chunks
+
+
+def intersect_next(nbrs_v, nbrs_p, prev, u_group, u_rank, p: float,
+                   q: float, interpret: bool | None = None):
+    """Exact factorized node2vec selection via the intersect kernel, with
+    shape-flexible padding: rows padded to the 8-row tile with all-sentinel
+    windows (found=False there), lanes padded to 128 with the sentinel
+    (never matches a vertex). Returns (nxt u32 [B], found bool [B])."""
+    interpret = _interpret_default() if interpret is None else interpret
+    b, d = nbrs_v.shape
+    padb = (-b) % _intersect.ROWS
+    padd = (-d) % _intersect.LANES
+    if padb or padd:
+        sent = _intersect.SENT
+        nbrs_v = jnp.pad(nbrs_v, ((0, padb), (0, padd)),
+                         constant_values=sent)
+        nbrs_p = jnp.pad(nbrs_p, ((0, padb), (0, padd)),
+                         constant_values=sent)
+        prev = jnp.pad(prev, (0, padb))
+        u_group = jnp.pad(u_group, (0, padb))
+        u_rank = jnp.pad(u_rank, (0, padb))
+    nxt, found = _intersect.factorized_next_pallas(
+        nbrs_v, nbrs_p, prev, u_group, u_rank,
+        float(1.0 / p), float(1.0 / q), interpret=interpret)
+    return nxt[:b], found[:b]
 
 
 def sgns_step(u, v_pos, v_neg, interpret: bool | None = None):

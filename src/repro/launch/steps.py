@@ -506,10 +506,17 @@ def _wharf_plan(arch, cfg, info, mesh, shape_name) -> CellPlan:
 
     from repro.kernels.delta import CHUNK, WORDS
 
-    if cfg.find_next_backend != "auto":
+    if "order" in info or "sampler" in info:
+        # per-shape walk-model overrides (the order-2 sampler comparison
+        # cells): WharfStreamConfig is a frozen dataclass, so derive a copy
+        import dataclasses as _dc
+        cfg = _dc.replace(cfg, order=info.get("order", cfg.order),
+                          sampler=info.get("sampler", cfg.sampler))
+    if cfg.find_next_backend != "auto" or cfg.intersect_backend != "auto":
         # explicit config choice -> install process-wide; default "auto"
-        # configs leave the registry untouched (no side effect on other
-        # stores living in this process)
+        # configs leave the registries untouched (select_backend skips
+        # "auto" fields, so neither registry is clobbered by the other's
+        # explicit choice)
         cfg.select_backend()
     wcfg = cfg.walk_config()
     t = cfg.n_vertices * cfg.n_walks_per_vertex * cfg.length

@@ -1,0 +1,26 @@
+"""Shared test assertion: every stored walk transition is valid in a graph.
+
+The system's core walk-validity invariant, asserted by several test modules
+(core, stream, property fuzz): each consecutive pair (a, b) of a walk matrix
+must be an edge of the graph, except the self-transitions of isolated
+vertices (deg(a) == 0 -> the walker stays in place). Importable as a plain
+module: pytest's prepend import mode puts tests/ on sys.path for every test
+module collected here.
+"""
+import jax.numpy as jnp
+import numpy as np
+
+U32 = jnp.uint32
+
+
+def assert_walks_valid(graph, wm):
+    """wm: [n_walks, l] walk matrix (numpy or jax) vs a StreamingGraph."""
+    wm = np.asarray(wm)
+    a = wm[:, :-1].reshape(-1)
+    b = wm[:, 1:].reshape(-1)
+    has = np.asarray(graph.has_edge(jnp.asarray(a, U32), jnp.asarray(b, U32)))
+    degs = np.asarray(graph.degrees())
+    bad = ~(has | ((a == b) & (degs[a] == 0)))
+    assert not bad.any(), \
+        f"{int(bad.sum())} invalid walk transitions, e.g. " \
+        f"{list(zip(a[bad][:5].tolist(), b[bad][:5].tolist()))}"

@@ -8,7 +8,7 @@ from hypothesis import given, settings, strategies as st
 
 import repro.core  # noqa: F401  (x64 for the oracles)
 from repro.core import pairing
-from repro.kernels import ops
+from repro.kernels import intersect, ops
 from repro.kernels import ref
 from repro.kernels.delta import CHUNK, encode_chunks, packed_nbytes
 
@@ -147,6 +147,116 @@ def test_range_search_miss():
     _, found = ops.find_next_packed(packed, widths, ahi, alo, cidx,
                                     fq.astype(U32), interpret=True)
     assert not bool(found.any())
+
+
+# --------------------------------------------------- intersect (factorized)
+
+
+def _intersect_case(rng, b, d, n_vertices=None, p=0.5, q=2.0):
+    """Random sentinel-padded neighbor windows + prev + uniforms."""
+    # universe a small multiple of the window so intersections are common
+    # but degrees (up to d) always fit without replacement
+    n_vertices = 2 * d if n_vertices is None else n_vertices
+    sent = np.uint32(0xFFFFFFFF)
+    nbrs_v = np.full((b, d), sent, np.uint32)
+    nbrs_p = np.full((b, d), sent, np.uint32)
+    deg_v = rng.integers(0, d + 1, size=b)
+    deg_p = rng.integers(0, d + 1, size=b)
+    prev = np.zeros(b, np.uint32)
+    for i in range(b):
+        nv = np.sort(rng.choice(n_vertices, size=deg_v[i], replace=False))
+        npr = np.sort(rng.choice(n_vertices, size=deg_p[i], replace=False))
+        nbrs_v[i, : deg_v[i]] = nv
+        nbrs_p[i, : deg_p[i]] = npr
+        # prev is a neighbor of v when possible (the walk-context shape)
+        prev[i] = nv[rng.integers(deg_v[i])] if deg_v[i] else \
+            rng.integers(n_vertices)
+    u = rng.random((b, 2)).astype(np.float32)
+    return (jnp.asarray(nbrs_v), jnp.asarray(nbrs_p), jnp.asarray(prev),
+            jnp.asarray(u[:, 0]), jnp.asarray(u[:, 1]), p, q)
+
+
+def _intersect_numpy_oracle(nbrs_v, nbrs_p, prev, u_g, u_r, p, q):
+    """Per-row python/numpy replay of the group factorization (f32 mass
+    arithmetic in the backends' fixed order)."""
+    sent = np.uint32(0xFFFFFFFF)
+    inv_p, inv_q = np.float32(1.0 / p), np.float32(1.0 / q)
+    out_nxt, out_found = [], []
+    for i in range(nbrs_v.shape[0]):
+        row = [x for x in np.asarray(nbrs_v[i]) if x != sent]
+        pset = {int(x) for x in np.asarray(nbrs_p[i]) if x != sent}
+        pv = int(np.asarray(prev[i]))
+        g0 = [x for x in row if int(x) == pv]
+        g1 = [x for x in row if int(x) != pv and int(x) in pset]
+        g2 = [x for x in row if int(x) != pv and int(x) not in pset]
+        m0 = np.float32(len(g0)) * inv_p
+        m1 = np.float32(len(g1))
+        m2 = np.float32(len(g2)) * inv_q
+        if not row:
+            out_nxt.append(0)
+            out_found.append(False)
+            continue
+        t = np.float32(np.asarray(u_g[i])) * np.float32(m0 + m1 + m2)
+        grp = int(t >= m0) + int(t >= np.float32(m0 + m1))
+        last = 2 if g2 else (1 if g1 else 0)
+        grp = min(grp, last)
+        members = (g0, g1, g2)[grp]
+        r = min(int(np.float32(np.asarray(u_r[i]))
+                    * np.float32(len(members))), len(members) - 1)
+        out_nxt.append(int(members[r]))
+        out_found.append(True)
+    return np.asarray(out_nxt, np.uint32), np.asarray(out_found)
+
+
+@pytest.mark.parametrize("b,d", [(16, 128), (8, 256), (24, 128)])
+def test_intersect_backends_bit_agree_and_match_oracle(b, d):
+    """interpret / pallas-interpret / xla-ref produce BIT-identical
+    selections, all equal to a per-row python/numpy replay."""
+    rng = np.random.default_rng(b * d)
+    case = _intersect_case(rng, b, d)
+    ref_nxt, ref_found = _intersect_numpy_oracle(*case)
+    for backend in ("interpret", "pallas-interpret", "xla-ref"):
+        nxt, found = intersect.factorized_next(*case, backend=backend)
+        np.testing.assert_array_equal(np.asarray(nxt) * np.asarray(found),
+                                      ref_nxt * ref_found, err_msg=backend)
+        np.testing.assert_array_equal(np.asarray(found), ref_found,
+                                      err_msg=backend)
+
+
+def test_intersect_ops_wrapper_pads_off_tile_shapes():
+    """ops.intersect_next pads rows to the 8-row tile and lanes to 128 and
+    still bit-agrees with the unpadded interpret backend."""
+    rng = np.random.default_rng(5)
+    case = _intersect_case(rng, 13, 48)
+    ref_nxt, ref_found = intersect.factorized_next(*case,
+                                                   backend="interpret")
+    nxt, found = ops.intersect_next(*case, interpret=True)
+    np.testing.assert_array_equal(np.asarray(nxt) * np.asarray(found),
+                                  np.asarray(ref_nxt) * np.asarray(ref_found))
+    np.testing.assert_array_equal(np.asarray(found), np.asarray(ref_found))
+
+
+def test_intersect_explicit_kernel_backend_raises_off_tile():
+    """An explicit kernel-backend request must never silently validate the
+    fallback (the SGNS registry contract)."""
+    rng = np.random.default_rng(9)
+    case = _intersect_case(rng, 12, 100)
+    with pytest.raises(ValueError, match="requires B %"):
+        intersect.factorized_next(*case, backend="pallas-interpret")
+    # auto falls back to interpret on the same shapes
+    nxt, _ = intersect.factorized_next(*case, backend="auto")
+    assert nxt.shape == (12,)
+
+
+def test_intersect_member_sorted_equals_allpairs():
+    """The interpret backend's binary-search membership == the kernel's
+    all-pairs membership on valid lanes."""
+    rng = np.random.default_rng(3)
+    nbrs_v, nbrs_p, *_ = _intersect_case(rng, 32, 64)
+    valid = np.asarray(nbrs_v) != np.uint32(0xFFFFFFFF)
+    a = np.asarray(intersect.member_sorted(nbrs_v, nbrs_p))
+    b = np.asarray(intersect.member_allpairs(nbrs_v, nbrs_p))
+    np.testing.assert_array_equal(a & valid, b & valid)
 
 
 # -------------------------------------------------------------------- sgns

@@ -1,12 +1,19 @@
 """Hypothesis property tests on system invariants (deliverable c):
-StreamingGraph algebra, delta-codec width classes, FINDNEXT totality."""
+StreamingGraph algebra, delta-codec width classes, FINDNEXT totality, and
+the stream fuzz: hypothesis-generated mixed insert/delete edge streams
+replayed through `WalkEngine.run_stream` against a pure-Python reference
+engine (bit-equivalent corpus + graph, final-graph walk validity)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 from hypothesis import given, settings, strategies as st
 
 import repro.core  # noqa: F401 (x64)
-from repro.core import StreamingGraph, pairing
+from repro.core import (StreamingGraph, WalkConfig, corpus_to_store,
+                        pairing)
+from repro.core.corpus import generate_walk_matrix
+from repro.core.update import WalkEngine
+from repro.core.walkers import WalkModel, sample_next
 from repro.kernels import ops
 from repro.kernels.delta import CHUNK
 
@@ -94,3 +101,157 @@ def test_search_range_encloses_any_code(f, v, spread):
     mid = v + spread // 2
     z = pairing.szudzik_pair(jnp.uint64(f), jnp.uint64(mid))
     assert int(lb) <= int(z) <= int(ub)
+
+
+# --------------------------------------------------------------- stream fuzz
+#
+# A pure-Python/numpy reference engine: graph algebra on an edge SET, MAV /
+# p_min / lane compaction / re-walk as explicit loops over a dense walk
+# matrix. It shares only the SAMPLENEXT primitive (same keys, same lane
+# shapes — the draw discipline `_rewalk` documents), so the engine's entire
+# store/overlay/merge/scan machinery is validated against transparent code:
+# the scan-pipelined `run_stream` corpus must be BIT-equal to the reference
+# matrix, the graph bit-equal to the reference edge set, and every stored
+# walk valid in the final graph.
+
+_FN = 16         # vertices (log2 4)
+_FCAP = 512      # edge capacity (never overflows at these sizes)
+_FBATCHES = 3    # fixed stream shape (one jit trace per model param)
+_FINS, _FDEL = 4, 2
+
+
+class _PyRefEngine:
+    def __init__(self, walks, edges, cfg: WalkConfig):
+        self.m = np.asarray(walks).astype(np.uint32).copy()
+        self.edges = set(edges)            # DIRECTED (src, dst) pairs
+        self.cfg = cfg
+
+    def graph(self) -> StreamingGraph:
+        g = StreamingGraph.empty(_FN, _FCAP)
+        if not self.edges:
+            return g
+        pairs = sorted(self.edges)
+        return g.insert_edges(jnp.asarray([a for a, _ in pairs], U32),
+                              jnp.asarray([b for _, b in pairs], U32),
+                              undirected=False)
+
+    def update(self, key, ins, dels):
+        """One Algorithm-2 update, replayed in plain python/numpy."""
+        for a, b in dels:                  # deletions first (paper §3.1)
+            self.edges.discard((a, b))
+            self.edges.discard((b, a))
+        for a, b in ins:
+            self.edges.add((a, b))
+            self.edges.add((b, a))
+        g = self.graph()
+
+        touched = {v for e in list(ins) + list(dels) for v in e}
+        n_walks, length = self.m.shape
+        p_min = np.full(n_walks, length, np.int64)
+        v_min = np.zeros(n_walks, np.uint32)
+        for w in range(n_walks):
+            for p in range(length):
+                if int(self.m[w, p]) in touched:
+                    p_min[w], v_min[w] = p, self.m[w, p]
+                    break
+        aff = np.nonzero(p_min < length)[0]
+
+        # lane layout identical to _rewalk: compact_nonzero pads with id 0
+        walk_ids = np.zeros(n_walks, np.int64)
+        walk_ids[: aff.size] = aff
+        lane_valid = np.arange(n_walks) < aff.size
+        pm = p_min[walk_ids]
+        vm = v_min[walk_ids]
+        if self.cfg.model.order == 2:
+            prev = self.m[walk_ids, np.maximum(pm - 1, 0)].copy()
+        else:
+            prev = vm.copy()
+
+        keys = jax.random.split(key, length)
+        cur = vm.copy()
+        for p in range(length):
+            cur = np.where(pm == p, vm, cur).astype(np.uint32)
+            nxt = np.asarray(sample_next(keys[p], g, jnp.asarray(cur, U32),
+                                         jnp.asarray(prev, U32),
+                                         self.cfg.model))
+            emit = lane_valid & (p >= pm)
+            if p < length - 1:
+                self.m[walk_ids[emit], p + 1] = nxt[emit]
+            prev = np.where(p >= pm, cur, prev).astype(np.uint32)
+            if p < length - 1:
+                cur = np.where(p >= pm, nxt, cur).astype(np.uint32)
+
+
+_fuzz_edges = st.lists(
+    st.tuples(st.integers(0, _FN - 1), st.integers(0, _FN - 1)).filter(
+        lambda e: e[0] != e[1]),
+    min_size=1, max_size=16)
+_fuzz_ins = st.lists(
+    st.tuples(st.integers(0, _FN - 1), st.integers(0, _FN - 1)).filter(
+        lambda e: e[0] != e[1]),
+    min_size=_FBATCHES * _FINS, max_size=_FBATCHES * _FINS)
+_fuzz_del = st.lists(
+    st.tuples(st.integers(0, _FN - 1), st.integers(0, _FN - 1)).filter(
+        lambda e: e[0] != e[1]),
+    min_size=_FBATCHES * _FDEL, max_size=_FBATCHES * _FDEL)
+
+
+# all three walk models replay the SAME drawn stream (the fallback
+# hypothesis shim cannot compose @given with pytest.mark.parametrize, and
+# sharing the example across models is the stronger comparison anyway)
+_FUZZ_MODELS = (
+    WalkModel(order=1),
+    WalkModel(order=2, p=0.5, q=2.0),
+    WalkModel(order=2, p=0.5, q=2.0, sampler="factorized", dmax=32),
+)
+
+
+@given(_fuzz_edges, _fuzz_ins, _fuzz_del, st.integers(0, 2**16))
+@settings(max_examples=10, deadline=None)
+def test_stream_fuzz_matches_python_reference(edges, ins, dels, seed):
+    """run_stream == pure-python reference: corpus and graph bit-equal,
+    every stored walk valid in the final graph (all three walk models)."""
+    for model in _FUZZ_MODELS:
+        _check_stream_fuzz(model, edges, ins, dels, seed)
+
+
+def _check_stream_fuzz(model, edges, ins, dels, seed):
+    cfg = WalkConfig(n_walks_per_vertex=1, length=5, model=model)
+    src = jnp.asarray([a for a, _ in edges], U32)
+    dst = jnp.asarray([b for _, b in edges], U32)
+    g0 = StreamingGraph.from_edges(src, dst, _FN, _FCAP)
+    walks0 = generate_walk_matrix(jax.random.PRNGKey(seed), g0, cfg)
+    store = corpus_to_store(walks0, cfg, _FN)
+    eng = WalkEngine(graph=g0, store=store, cfg=cfg, merge_policy="on-demand",
+                     rewalk_capacity=_FN, max_pending=2)
+
+    directed0 = {(int(a), int(b)) for a, b in edges}
+    directed0 |= {(b, a) for a, b in directed0}
+    ref = _PyRefEngine(walks0, directed0, cfg)
+
+    ins_s = jnp.asarray([[a for a, _ in ins[i * _FINS:(i + 1) * _FINS]]
+                         for i in range(_FBATCHES)], U32)
+    ins_d = jnp.asarray([[b for _, b in ins[i * _FINS:(i + 1) * _FINS]]
+                         for i in range(_FBATCHES)], U32)
+    del_s = jnp.asarray([[a for a, _ in dels[i * _FDEL:(i + 1) * _FDEL]]
+                         for i in range(_FBATCHES)], U32)
+    del_d = jnp.asarray([[b for _, b in dels[i * _FDEL:(i + 1) * _FDEL]]
+                         for i in range(_FBATCHES)], U32)
+
+    stream_key = jax.random.PRNGKey(seed + 1)
+    eng.run_stream(stream_key, ins_s, ins_d, del_s, del_d)
+    assert not eng.mav_overflowed
+
+    keys = jax.random.split(stream_key, _FBATCHES)
+    for i in range(_FBATCHES):
+        ref.update(keys[i], ins[i * _FINS:(i + 1) * _FINS],
+                   dels[i * _FDEL:(i + 1) * _FDEL])
+
+    # corpus bit-equivalence (walk_matrix forces the on-demand merge, so the
+    # merge path is validated too) + graph bit-equivalence
+    np.testing.assert_array_equal(np.asarray(eng.walk_matrix()), ref.m)
+    np.testing.assert_array_equal(np.asarray(eng.graph.codes),
+                                  np.asarray(ref.graph().codes))
+    # final-graph validity of every stored walk
+    from _walk_checks import assert_walks_valid
+    assert_walks_valid(eng.graph, ref.m)

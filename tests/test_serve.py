@@ -67,3 +67,98 @@ def test_ppr_row():
     assert row.shape == (64,)
     assert float(row.sum()) == float(jnp.asarray(1.0)) or abs(float(row.sum()) - 1.0) < 1e-3
     assert float(row[7]) > 0  # restart mass at the seed
+
+
+# --------------------------- mergeless read paths under deletion streams
+# (PR-2/3 rewired neighborhoods/ppr_row/embedding_neighbors onto the
+# overlay + epoch-keyed caches; these tests cover those paths directly)
+
+
+def _deletion_stream_service(seed=0, n_batches=3):
+    """Per-batch mixed insert+delete updates, pending buffer NOT merged."""
+    from repro.data.streams import mixed_edge_stream
+    svc = make_service(seed)
+    ins_s, ins_d, del_s, del_d = mixed_edge_stream(
+        jax.random.PRNGKey(seed + 5), n_batches, 12, 6, 6)
+    keys = jax.random.split(jax.random.PRNGKey(seed + 6), n_batches)
+    for i in range(n_batches):
+        svc.engine.update_batch(keys[i], ins_s[i], ins_d[i], del_s[i],
+                                del_d[i])
+    assert svc.engine.n_pending == n_batches  # genuinely mergeless reads
+    return svc
+
+
+def test_neighborhoods_mergeless_equals_postmerge_under_deletions():
+    """Overlay-backed neighborhoods over base + pending == the post-merge
+    answer, on a deletion-bearing stream."""
+    svc = _deletion_stream_service()
+    seeds = jnp.asarray([1, 5, 9, 23], U32)
+    nb_overlay = np.asarray(svc.neighborhoods(seeds, hops=2))
+    svc.engine.merge()                      # state swap -> overlay rebuilt
+    nb_merged = np.asarray(svc.neighborhoods(seeds, hops=2))
+    np.testing.assert_array_equal(nb_overlay, nb_merged)
+
+
+def test_walks_of_mergeless_under_deletions():
+    """walks_of (base slot-epoch mask + pending owner index) stays an exact
+    inverted index while deletions sit unmerged in the pending buffer."""
+    svc = _deletion_stream_service(seed=1)
+    walks = np.asarray(svc.engine.walk_matrix())  # forces this engine's merge
+    # compare against an identically-driven service still holding pending
+    svc2 = _deletion_stream_service(seed=1)
+    out = np.asarray(svc2.walks_of([3, 11], capacity=128))
+    for row, v in zip(out, (3, 11)):
+        got = set(int(w) for w in row if w >= 0)
+        expected = set(np.nonzero((walks == v).any(axis=1))[0].tolist())
+        assert got == expected, (v, got, expected)
+
+
+def test_ppr_cache_epoch_keyed_invalidation():
+    """The ppr walk-matrix cache survives merges (same epoch) and is
+    invalidated exactly by updates (epoch bump), including deletions."""
+    from repro.core.ppr import ppr_scores
+    svc = _deletion_stream_service(seed=2)
+    row1 = np.asarray(svc.ppr_row(9))
+    wm1 = svc.walk_matrix()
+    assert svc.walk_matrix() is wm1          # cache hit between queries
+    svc.engine.merge()
+    assert svc.walk_matrix() is wm1          # merge: contents unchanged
+    # a deletion-only update invalidates
+    codes = np.asarray(svc.engine.graph.codes)[:4]
+    dsrc = jnp.asarray((codes >> np.uint64(32)), U32)
+    ddst = jnp.asarray((codes & np.uint64(0xFFFFFFFF)), U32)
+    svc.engine.delete_edges(jax.random.PRNGKey(77), dsrc, ddst)
+    wm2 = svc.walk_matrix()
+    assert wm2 is not wm1
+    row2 = np.asarray(svc.ppr_row(9))
+    expect = np.asarray(ppr_scores(jnp.asarray(np.asarray(wm2)),
+                                   svc.engine.store.n_vertices, 0.2))[9]
+    np.testing.assert_allclose(row2, expect, rtol=1e-6)
+    assert row1.shape == row2.shape
+
+
+def test_embedding_neighbors_after_set_embedding_table():
+    """Cosine top-k over an installed table: self excluded, scores ordered,
+    refresh swaps the table; querying before install raises."""
+    svc = make_service()
+    with np.testing.assert_raises(ValueError):
+        svc.embedding_neighbors([0])
+    # planted structure: vertices 0..3 share a direction, 4..7 another
+    rng = np.random.default_rng(0)
+    table = rng.normal(size=(64, 16)).astype(np.float32) * 0.01
+    table[:4] += np.ones(16, np.float32)
+    table[4:8] -= np.ones(16, np.float32)
+    svc.set_embedding_table(jnp.asarray(table))
+    ids, scores = svc.embedding_neighbors([0, 4], k=3)
+    ids, scores = np.asarray(ids), np.asarray(scores)
+    assert set(ids[0]) <= {1, 2, 3} and set(ids[1]) <= {5, 6, 7}
+    assert 0 not in ids[0] and 4 not in ids[1]      # self excluded
+    assert (np.diff(scores, axis=1) <= 1e-6).all()  # descending
+    # refresh: an identity-ish table changes the answer deterministically
+    eye = np.eye(64, 16, dtype=np.float32)
+    eye[0, :] = 0.0
+    eye[0, 1] = 1.0                                  # vertex 0 == vertex 1
+    svc.set_embedding_table(jnp.asarray(eye))
+    ids2, scores2 = svc.embedding_neighbors([0], k=1)
+    assert int(np.asarray(ids2)[0, 0]) == 1
+    assert float(np.asarray(scores2)[0, 0]) > 0.99

@@ -21,10 +21,12 @@ N = 2 ** LOG2_N
 
 
 def make_engine(seed=0, n_w=2, length=8, policy="on-demand", order=1,
-                merge_impl="interleave", max_pending=3, mav_capacity=None):
+                merge_impl="interleave", max_pending=3, mav_capacity=None,
+                sampler="rejection"):
     src, dst = rmat_edges(jax.random.PRNGKey(seed), 300, LOG2_N)
     g = StreamingGraph.from_edges(src, dst, N, 4096)
-    model = WalkModel(order=order, p=0.5, q=2.0) if order == 2 else WalkModel()
+    model = (WalkModel(order=order, p=0.5, q=2.0, sampler=sampler, dmax=64)
+             if order == 2 else WalkModel())
     cfg = WalkConfig(n_walks_per_vertex=n_w, length=length, model=model)
     store = generate_corpus(jax.random.PRNGKey(seed + 1), g, cfg)
     return WalkEngine(graph=g, store=store, cfg=cfg, merge_policy=policy,
@@ -83,6 +85,26 @@ def test_run_stream_matches_per_batch(policy, order):
     e_scan.merge()
     assert_stores_identical(e_ref.store, e_scan.store)
     assert not e_ref.mav_overflowed and not e_scan.mav_overflowed
+
+
+@pytest.mark.parametrize("policy", ["on-demand", "eager"])
+def test_run_stream_factorized_sampler(policy):
+    """The exact factorized order-2 sampler (kernels/intersect.py) rides the
+    same drivers: scan == per-batch bit-identical on mixed streams, and the
+    resulting walks are valid in the final graph."""
+    key = jax.random.PRNGKey(17)
+    ins_s, ins_d, del_s, del_d = make_stream()
+    e_ref = make_engine(policy=policy, order=2, length=6,
+                        sampler="factorized")
+    e_scan = make_engine(policy=policy, order=2, length=6,
+                         sampler="factorized")
+    aff_ref = drive_per_batch(e_ref, key, ins_s, ins_d, del_s, del_d)
+    aff_scan = np.asarray(e_scan.run_stream(key, ins_s, ins_d, del_s, del_d))
+    np.testing.assert_array_equal(aff_ref, aff_scan)
+    e_ref.merge(), e_scan.merge()
+    assert_stores_identical(e_ref.store, e_scan.store)
+    from _walk_checks import assert_walks_valid
+    assert_walks_valid(e_scan.graph, e_scan.walk_matrix())
 
 
 @pytest.mark.parametrize("merge_impl", ["interleave", "lexsort"])

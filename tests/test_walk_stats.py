@@ -1,0 +1,250 @@
+"""Statistical walk-correctness harness (`stats` tier): chi-square
+goodness-of-fit of empirical order-2 transition distributions, conditioned
+on (prev, v), against the EXACT alpha-weighted probabilities.
+
+Two levels, both fixed-seed (deterministic — quarantined from tier-1 only
+because statistical assertions read as flaky to reviewers and belong in
+their own CI step; run with `pytest -m stats`):
+
+  * sampler-level — many independent SAMPLENEXT draws per (prev, v) context
+    on a static graph. The factorized sampler must be exact (chi-square
+    passes at alpha=1e-3); the rejection sampler must respect its documented
+    residual-bias bound (TV <= (1 - amin/amax)^K + noise) and is SHOWN to be
+    detectably biased at small K (the harness has power).
+
+  * stream-level — a whole insert+delete stream through `WalkEngine`
+    (both samplers). Every stored transition was re-sampled against a graph
+    whose N(v)/N(prev) equal the final ones (any edge incident to prev or v
+    marks the walk affected at an earlier position), so the corpus
+    conditional distributions are chi-square-tested against the FINAL
+    graph's alpha weights.
+
+Expected-count handling: contexts enter the statistic only when every
+category's expected count >= 5 (classical validity rule); df sums (k-1)
+over included contexts. The chi-square critical value uses the
+Wilson-Hilferty cube approximation (no scipy in the image) — accurate to
+~1% for the df used here.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.core  # noqa: F401 (x64)
+from repro.core import StreamingGraph, WalkConfig, generate_corpus
+from repro.core.update import WalkEngine
+from repro.core.walkers import WalkModel, sample_next
+from repro.data.streams import mixed_edge_stream, rmat_edges
+
+U32 = jnp.uint32
+
+pytestmark = pytest.mark.stats
+
+
+# ------------------------------------------------------------------ helpers
+
+
+def chi2_crit(df: int, alpha: float = 1e-3) -> float:
+    """Chi-square critical value via the Wilson-Hilferty approximation."""
+    # one-sided normal quantile via Acklam-style rational approximation is
+    # overkill; the few alphas used here are tabulated
+    z = {1e-2: 2.3263, 1e-3: 3.0902, 1e-4: 3.7190}[alpha]
+    return df * (1.0 - 2.0 / (9.0 * df) + z * np.sqrt(2.0 / (9.0 * df))) ** 3
+
+
+def adjacency(graph: StreamingGraph):
+    """dict vertex -> sorted np array of neighbors (live prefix only)."""
+    codes = np.asarray(graph.codes)[: int(graph.num_edges)]
+    src = (codes >> np.uint64(32)).astype(np.int64)
+    dst = (codes & np.uint64(0xFFFFFFFF)).astype(np.int64)
+    return {int(v): np.sort(dst[src == v]) for v in np.unique(src)}
+
+
+def alpha_probs(adj, prev: int, v: int, p: float, q: float):
+    """(neighbors of v, exact alpha-weighted transition probabilities)."""
+    nbrs = adj.get(v, np.zeros((0,), np.int64))
+    prev_set = set(adj.get(prev, np.zeros((0,), np.int64)).tolist())
+    w = np.asarray([1.0 / p if x == prev
+                    else (1.0 if x in prev_set else 1.0 / q)
+                    for x in nbrs], np.float64)
+    return nbrs, w / w.sum()
+
+
+def chi2_tv_against_exact(counts_by_ctx, adj, p, q, min_expected=5.0):
+    """Aggregate (chi2, df, weighted mean TV) of empirical next-vertex
+    counts per (prev, v) context against the exact alpha probabilities.
+
+    counts_by_ctx: dict (prev, v) -> dict next -> count. Contexts where any
+    expected cell < min_expected are excluded from chi2 (validity rule) but
+    still contribute to the TV summary."""
+    chi2, df = 0.0, 0
+    tv_num, tv_den = 0.0, 0.0
+    for (prev, v), cnt in counts_by_ctx.items():
+        nbrs, probs = alpha_probs(adj, prev, v, p, q)
+        if nbrs.size < 2:
+            continue
+        m = float(sum(cnt.values()))
+        obs = np.asarray([cnt.get(int(x), 0) for x in nbrs], np.float64)
+        assert obs.sum() == m, "empirical next outside N(v)"
+        exp = m * probs
+        tv = 0.5 * np.abs(obs / m - probs).sum()
+        tv_num += m * tv
+        tv_den += m
+        if (exp >= min_expected).all():
+            chi2 += (((obs - exp) ** 2) / exp).sum()
+            df += nbrs.size - 1
+    assert df > 0, "no context had enough samples for chi-square"
+    return chi2, df, tv_num / tv_den
+
+
+def edge_contexts(adj, max_contexts: int):
+    """(prev, v) pairs along edges — the contexts a walk can reach."""
+    out = []
+    for prev in sorted(adj):
+        for v in adj[prev]:
+            if int(v) in adj:
+                out.append((int(prev), int(v)))
+    return out[:max_contexts]
+
+
+def sampler_counts(graph, model: WalkModel, contexts, reps: int,
+                   rounds: int, seed: int):
+    """Empirical next-vertex counts: `reps` lanes per context, `rounds`
+    independent SAMPLENEXT batches (fresh key each round)."""
+    prev = jnp.asarray(np.repeat([c[0] for c in contexts], reps), U32)
+    v = jnp.asarray(np.repeat([c[1] for c in contexts], reps), U32)
+    ctx_of = np.repeat(np.arange(len(contexts)), reps)
+    counts = {c: {} for c in contexts}
+    for r in range(rounds):
+        out = np.asarray(sample_next(jax.random.PRNGKey(seed + r), graph,
+                                     v, prev, model))
+        for lane, x in enumerate(out):
+            cnt = counts[contexts[ctx_of[lane]]]
+            cnt[int(x)] = cnt.get(int(x), 0) + 1
+    return counts
+
+
+def _sampler_graph(seed=0):
+    src, dst = rmat_edges(jax.random.PRNGKey(seed), 120, 5)
+    return StreamingGraph.from_edges(src, dst, 32, 1024)
+
+
+# ------------------------------------------------------- sampler-level tests
+
+
+def test_factorized_sampler_exact_chi2():
+    """The factorized sampler is exact even for sharp (p, q)."""
+    g = _sampler_graph()
+    adj = adjacency(g)
+    contexts = edge_contexts(adj, 12)
+    p, q = 0.25, 4.0
+    model = WalkModel(order=2, p=p, q=q, sampler="factorized", dmax=32)
+    counts = sampler_counts(g, model, contexts, reps=16, rounds=40, seed=50)
+    chi2, df, tv = chi2_tv_against_exact(counts, adj, p, q)
+    assert chi2 < chi2_crit(df, 1e-3), (chi2, df, tv)
+
+
+def test_rejection_sampler_bias_bound():
+    """K=8 rejection: empirical TV within the documented (1-amin/amax)^K
+    residual bound (plus sampling noise, calibrated off the exact sampler
+    on the identical harness)."""
+    g = _sampler_graph()
+    adj = adjacency(g)
+    contexts = edge_contexts(adj, 12)
+    p, q = 0.5, 2.0
+    k = 8
+    bound = (1.0 - (0.5 / 2.0)) ** k           # amin/amax = (1/q)/(1/p)
+    m_rej = WalkModel(order=2, p=p, q=q, n_trials=k)
+    m_fac = WalkModel(order=2, p=p, q=q, sampler="factorized", dmax=32)
+    c_rej = sampler_counts(g, m_rej, contexts, reps=16, rounds=40, seed=60)
+    c_fac = sampler_counts(g, m_fac, contexts, reps=16, rounds=40, seed=61)
+    _, _, tv_rej = chi2_tv_against_exact(c_rej, adj, p, q)
+    _, _, tv_fac = chi2_tv_against_exact(c_fac, adj, p, q)
+    # tv_fac is pure sampling noise at these counts (factorized is exact)
+    assert tv_rej <= bound + tv_fac + 0.02, (tv_rej, bound, tv_fac)
+
+
+def test_harness_detects_rejection_bias_at_small_k():
+    """Power check: at K=2 with sharp (p, q) the rejection sampler's
+    residual bias is REAL and the chi-square harness rejects it, while the
+    factorized sampler passes on the identical contexts/sample sizes."""
+    g = _sampler_graph()
+    adj = adjacency(g)
+    contexts = edge_contexts(adj, 12)
+    p, q = 0.25, 4.0
+    m_rej = WalkModel(order=2, p=p, q=q, n_trials=2)
+    m_fac = WalkModel(order=2, p=p, q=q, sampler="factorized", dmax=32)
+    c_rej = sampler_counts(g, m_rej, contexts, reps=16, rounds=40, seed=70)
+    c_fac = sampler_counts(g, m_fac, contexts, reps=16, rounds=40, seed=71)
+    chi2_rej, df_rej, _ = chi2_tv_against_exact(c_rej, adj, p, q)
+    chi2_fac, df_fac, _ = chi2_tv_against_exact(c_fac, adj, p, q)
+    assert chi2_rej > 2.0 * chi2_crit(df_rej, 1e-3), (chi2_rej, df_rej)
+    assert chi2_fac < chi2_crit(df_fac, 1e-3), (chi2_fac, df_fac)
+
+
+# -------------------------------------------------------- stream-level tests
+
+
+def _stream_engine(sampler: str, p: float, q: float, seed=3, n_w=48,
+                   length=8):
+    src, dst = rmat_edges(jax.random.PRNGKey(seed), 40, 4)
+    g = StreamingGraph.from_edges(src, dst, 16, 2048)
+    model = WalkModel(order=2, p=p, q=q, sampler=sampler, dmax=32)
+    cfg = WalkConfig(n_walks_per_vertex=n_w, length=length, model=model)
+    store = generate_corpus(jax.random.PRNGKey(seed + 1), g, cfg)
+    return WalkEngine(graph=g, store=store, cfg=cfg,
+                      rewalk_capacity=16 * n_w, max_pending=3)
+
+
+def _stream_transition_counts(eng: WalkEngine, with_deletes: bool,
+                              seed=9, n_batches=4):
+    """Drive an insert(+delete) stream, return conditioned transition counts
+    of the final corpus: dict (prev, v) -> dict next -> count."""
+    n_del = 3 if with_deletes else 0
+    ins_s, ins_d, del_s, del_d = mixed_edge_stream(
+        jax.random.PRNGKey(seed), n_batches, 6, n_del, 4)
+    if with_deletes:
+        eng.run_stream(jax.random.PRNGKey(seed + 1), ins_s, ins_d,
+                       del_s, del_d)
+    else:
+        eng.run_stream(jax.random.PRNGKey(seed + 1), ins_s, ins_d)
+    assert not eng.mav_overflowed
+    wm = np.asarray(eng.walk_matrix())
+    degs = np.asarray(eng.graph.degrees())
+    counts = {}
+    for p_pos in range(1, wm.shape[1] - 1):
+        for prev, v, nxt in zip(wm[:, p_pos - 1], wm[:, p_pos],
+                                wm[:, p_pos + 1]):
+            if degs[int(v)] == 0:     # isolated: walker stays, no draw
+                continue
+            cnt = counts.setdefault((int(prev), int(v)), {})
+            cnt[int(nxt)] = cnt.get(int(nxt), 0) + 1
+    return counts
+
+
+@pytest.mark.parametrize("with_deletes", [False, True])
+def test_stream_factorized_exact_chi2(with_deletes):
+    """Acceptance: the factorized order-2 sampler passes the exact
+    chi-square test on insert and insert+delete streams."""
+    p, q = 0.5, 2.0
+    eng = _stream_engine("factorized", p, q)
+    counts = _stream_transition_counts(eng, with_deletes)
+    adj = adjacency(eng.graph)
+    chi2, df, tv = chi2_tv_against_exact(counts, adj, p, q)
+    assert chi2 < chi2_crit(df, 1e-3), (chi2, df, tv)
+
+
+@pytest.mark.parametrize("with_deletes", [False, True])
+def test_stream_rejection_bias_within_bound(with_deletes):
+    """The K=8 rejection sampler stays within its documented residual-bias
+    bound on the same streams (noise calibrated off the exact sampler)."""
+    p, q = 0.5, 2.0
+    bound = (1.0 - 0.25) ** 8
+    e_rej = _stream_engine("rejection", p, q)
+    e_fac = _stream_engine("factorized", p, q)
+    c_rej = _stream_transition_counts(e_rej, with_deletes)
+    c_fac = _stream_transition_counts(e_fac, with_deletes)
+    adj = adjacency(e_rej.graph)
+    _, _, tv_rej = chi2_tv_against_exact(c_rej, adj, p, q)
+    _, _, tv_fac = chi2_tv_against_exact(c_fac, adj, p, q)
+    assert tv_rej <= bound + tv_fac + 0.05, (tv_rej, bound, tv_fac)
