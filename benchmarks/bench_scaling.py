@@ -1,35 +1,111 @@
 """Paper Fig. 9 + Fig. 10: scalability in batch size and in graph size,
-including the from-scratch-regeneration floor (the paper's black line)."""
+including the from-scratch-regeneration floor (the paper's black line).
+
+Two driver columns per cell (results in BENCH_SCALING.json):
+
+  * "per_batch"  — the legacy per-batch driver (one jitted call per update;
+    what the seed-era bench measured) for wharf and the IncrementalIndex
+    baseline;
+  * "pipelined"  — the PR-2 `run_stream` scan driver: the whole
+    [n_batches, batch] stream inside ONE jitted scan (DESIGN.md §5), the
+    production streaming path. Scaling claims are read off this column;
+    per_batch stays as the dispatch-overhead reference.
+"""
 from __future__ import annotations
 
+import os
+import sys
+
+# standalone invocation (`python benchmarks/bench_scaling.py --smoke`):
+# mirror run.py's path bootstrap
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for _p in (_ROOT, os.path.join(_ROOT, "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
+
+from benchmarks import common
 from benchmarks.common import (BenchGraph, DEFAULT_CFG, build_engines, emit,
-                               scratch_throughput, update_throughput)
+                               merge_json, scratch_throughput,
+                               stream_throughput, update_throughput)
+
+STREAM_BATCHES = 4
+
+
+def _wharf_factory(bg: BenchGraph, cfg):
+    def make():
+        _, engines = build_engines(bg, cfg, which=("wharf",))
+        return engines["wharf"]
+    return make
+
+
+def _cell(bg: BenchGraph, batch: int, label: str) -> dict:
+    """One (graph, batch-size) cell: legacy per-batch cells for wharf + ii,
+    plus the pipelined run_stream cell for wharf."""
+    out = {}
+    # fresh engines per cell: merge cadence must not leak across
+    _, engines = build_engines(bg, DEFAULT_CFG, which=("wharf", "ii"))
+    for ename, eng in engines.items():
+        wps, lat, aff = update_throughput(eng, bg, batch)
+        wps, lat = float(wps), float(lat)  # device scalars -> JSON
+        emit(f"{label}/{ename}", lat, f"walks_per_s={wps:.0f}")
+        out[ename] = {"driver": "per_batch",
+                      "walks_per_s": round(wps, 1),
+                      "us_per_walk": round(lat, 2)}
+    wps, lat, aff = stream_throughput(_wharf_factory(bg, DEFAULT_CFG), bg,
+                                      batch, n_batches=STREAM_BATCHES)
+    wps, lat = float(wps), float(lat)
+    emit(f"{label}/wharf_pipelined", lat,
+         f"walks_per_s={wps:.0f};n_batches={STREAM_BATCHES}")
+    out["wharf_pipelined"] = {"driver": "run_stream",
+                              "n_batches": STREAM_BATCHES,
+                              "walks_per_s": round(wps, 1),
+                              "us_per_walk": round(lat, 2)}
+    return out
 
 
 def run():
+    batches = (125, 250, 500, 1000)
+    sizes = (10, 11, 12, 13)
+    if common.SMOKE:
+        batches = (125, 500)
+        sizes = (10, 11)
+
+    results = {"fig9_batchsize": {}, "fig10_graphsize": {}}
+
     # -- Fig 9: batch-size scaling on the orkut-like graph
     bg = BenchGraph(log2_n=11, n_edges=40_000)
     g, _ = build_engines(bg, DEFAULT_CFG, which=())
     floor = scratch_throughput(g, DEFAULT_CFG)
     emit("fig9_floor_scratch", 0.0, f"walks_per_s={floor:.0f}")
-    for batch in (125, 250, 500, 1000):
-        # fresh engines per batch size: merge cadence must not leak across
-        _, engines = build_engines(bg, DEFAULT_CFG, which=("wharf", "ii"))
-        for ename, eng in engines.items():
-            wps, lat, aff = update_throughput(eng, bg, batch)
-            emit(f"fig9_batchsize/b{batch}/{ename}", lat,
-                 f"walks_per_s={wps:.0f};beats_scratch={wps > floor}")
+    results["fig9_floor_scratch_walks_per_s"] = round(floor, 1)
+    for batch in batches:
+        cell = _cell(bg, batch, f"fig9_batchsize/b{batch}")
+        for v in cell.values():
+            v["beats_scratch"] = v["walks_per_s"] > floor
+        results["fig9_batchsize"][f"b{batch}"] = cell
 
     # -- Fig 10: graph-size scaling on er-k graphs (uniform degree)
-    for log2_n in (10, 11, 12, 13):
+    for log2_n in sizes:
         bg = BenchGraph(log2_n=log2_n, n_edges=2 ** log2_n * 8,
                         a=0.25, b=0.25, c=0.25, d=0.25)
-        _, engines = build_engines(bg, DEFAULT_CFG, which=("wharf", "ii"))
-        for ename, eng in engines.items():
-            wps, lat, aff = update_throughput(eng, bg, 500)
-            emit(f"fig10_graphsize/er{log2_n}/{ename}", lat,
-                 f"walks_per_s={wps:.0f}")
+        results["fig10_graphsize"][f"er{log2_n}"] = _cell(
+            bg, 500, f"fig10_graphsize/er{log2_n}")
+
+    results["note"] = (
+        "per_batch = legacy one-jitted-call-per-update driver; "
+        "wharf_pipelined = run_stream scan driver (whole stream in one "
+        "jitted scan, DESIGN.md §5) — the production path Fig. 9/10 claims "
+        "are read from")
+    merge_json("BENCH_SCALING.json", results)
+    return results
 
 
 if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="quick mode (results land in "
+                         "BENCH_SCALING.smoke.json)")
+    if ap.parse_args().smoke:
+        common.SMOKE = True
     run()

@@ -25,13 +25,16 @@ for _p in (_ROOT, os.path.join(_ROOT, "src")):
         sys.path.insert(0, _p)
 
 import jax
+import jax.numpy as jnp
 
 from benchmarks import common
-from benchmarks.common import BenchGraph, emit, merge_json
+from benchmarks.common import BenchGraph, emit, merge_json, timeit
 from repro.core import StreamingGraph, WalkConfig, generate_corpus
+from repro.core.corpus import walk_start_vertex
 from repro.core.update import WalkEngine
 from repro.core.walkers import WalkModel
 from repro.data.streams import edge_batch_stream, rmat_edges
+from repro.kernels import megakernel
 
 # Same two regimes as bench_throughput (the drivers' workloads), but with
 # order-2 walk models — the sampler sits inside every re-walk step, so the
@@ -50,7 +53,8 @@ WORKLOADS = {
 P, Q = 0.5, 2.0
 
 
-def _engine(spec: dict, sampler: str, seed: int = 0) -> WalkEngine:
+def _engine(spec: dict, sampler: str, seed: int = 0,
+            megak: str = "off") -> WalkEngine:
     bg = spec["bg"]
     cap = spec["edge_capacity"]
     if cap is None:
@@ -60,7 +64,7 @@ def _engine(spec: dict, sampler: str, seed: int = 0) -> WalkEngine:
     g = StreamingGraph.from_edges(src, dst, bg.n, edge_capacity=cap)
     model = WalkModel(order=2, p=P, q=Q, sampler=sampler, dmax=spec["dmax"])
     cfg = WalkConfig(n_walks_per_vertex=spec["n_w"], length=spec["length"],
-                     model=model)
+                     model=model, megakernel=megak)
     store = generate_corpus(jax.random.PRNGKey(seed + 1), g, cfg)
     capacity = min(bg.n * cfg.n_walks_per_vertex, 1 << 13)
     return WalkEngine(graph=g, store=store, cfg=cfg,
@@ -113,9 +117,95 @@ def _bench_workload(wname: str, spec: dict, seed: int = 23,
     return out
 
 
+def _bench_megakernel_workload(wname: str, spec: dict, seed: int = 23,
+                               repeats: int = 3) -> dict:
+    """The fused rewalk-step megakernel (DESIGN.md §9) on the factorized
+    order-2 cell: end-to-end fused-vs-unfused run_stream, plus the
+    per-fusion-stage deltas of the interpret twin's cumulative `stages`
+    gate (decode -> +intersect -> +sample -> +write-back) on a standalone
+    full-rewalk fused_scan dispatch."""
+    bg = spec["bg"]
+    n_batches, batch_edges = spec["n_batches"], spec["batch_edges"]
+    if common.SMOKE:
+        n_batches = min(n_batches, 8)
+        repeats = 1
+    key = jax.random.PRNGKey(seed)
+    src, dst = edge_batch_stream(key, n_batches, batch_edges, bg.log2_n,
+                                 bg.a, bg.b, bg.c, bg.d)
+    out = {"n_batches": n_batches, "batch_edges": batch_edges,
+           "walks": {"n_w": spec["n_w"], "l": spec["length"],
+                     "p": P, "q": Q, "dmax": spec["dmax"]},
+           "end_to_end": {}, "fusion_stages": {}}
+
+    # end-to-end: the same factorized stream, unfused vs fused backends
+    # ("pallas" resolves to the interpreted kernel math off-TPU, so on CPU
+    # these cells measure the fused DISPATCH structure, not VMEM locality)
+    for megak in ("off", "interpret", "xla-ref"):
+        _time_stream(_engine(spec, "factorized", seed, megak), key, src,
+                     dst)  # compile
+        eng = _engine(spec, "factorized", seed, megak)
+        t = _time_stream(eng, key, src, dst)
+        for _ in range(repeats - 1):
+            t = min(t, _time_stream(_engine(spec, "factorized", seed,
+                                            megak), key, src, dst))
+        assert not eng.mav_overflowed, \
+            "MAV gather capacity overflow — resize mav_capacity"
+        ups = n_batches / t
+        out["end_to_end"][megak] = {
+            "updates_per_s": round(ups, 2), "total_s": round(t, 5)}
+        emit(f"megakernel/{wname}/e2e/{megak}", 1e6 * t / n_batches,
+             f"updates_per_s={ups:.1f}")
+    off = out["end_to_end"]["off"]["updates_per_s"]
+    out["end_to_end"]["fused_speedup_interpret"] = round(
+        out["end_to_end"]["interpret"]["updates_per_s"] / off, 3)
+
+    # per-fusion-stage deltas: one fused_scan over a full-rewalk batch
+    # (every walk affected from p_min=0 — the re-walk inner loop isolated
+    # from graph merge / MAV / merge policy)
+    eng = _engine(spec, "factorized", seed, "interpret")
+    capacity = eng.rewalk_capacity
+    n_walks = eng.store.n_walks
+    walk_ids = jnp.arange(capacity, dtype=jnp.uint32) % n_walks
+    lane_valid = jnp.arange(capacity) < n_walks
+    p_min = jnp.zeros((capacity,), jnp.int32)
+    v0 = walk_start_vertex(walk_ids, spec["n_w"])
+    graph, store, cfg = eng.graph, eng.store, eng.cfg
+
+    def scan_fn(stages):
+        @jax.jit
+        def f(k):
+            return megakernel.fused_scan(k, graph, store, None, walk_ids,
+                                         lane_valid, p_min, v0, cfg,
+                                         "interpret", stages=stages)
+        return f
+
+    k0 = jax.random.PRNGKey(seed + 1)
+    stage_s = {}
+    for st in ("decode", "intersect", "sample", "full"):
+        f = scan_fn(st)
+        jax.block_until_ready(f(k0))  # compile
+        stage_s[st] = timeit(lambda: jax.block_until_ready(f(k0)),
+                             repeats=repeats + 2)
+    out["fusion_stages"] = {
+        "rewalk_capacity": capacity,
+        "decode_s": round(stage_s["decode"], 6),
+        "intersect_delta_s": round(stage_s["intersect"]
+                                   - stage_s["decode"], 6),
+        "sample_delta_s": round(stage_s["sample"]
+                                - stage_s["intersect"], 6),
+        "writeback_delta_s": round(stage_s["full"] - stage_s["sample"], 6),
+        "full_s": round(stage_s["full"], 6),
+    }
+    for st, t in stage_s.items():
+        emit(f"megakernel/{wname}/stage/{st}", 1e6 * t,
+             f"cumulative_s={t:.6f}")
+    return out
+
+
 def run(seed: int = 23):
-    """Record the order-2 sampler comparison into BENCH_THROUGHPUT.json
-    (key "order2_samplers"), both workload regimes."""
+    """Record the order-2 sampler comparison (key "order2_samplers") and
+    the fused-megakernel comparison (key "megakernel") into
+    BENCH_THROUGHPUT.json, both workload regimes."""
     results = {"backend": jax.default_backend(), "workloads": {}}
     for wname, spec in WORKLOADS.items():
         results["workloads"][wname] = _bench_workload(wname, spec, seed)
@@ -125,7 +215,21 @@ def run(seed: int = 23):
         "< (1-amin/amax)^K), 'factorized' = exact BINGO-style group "
         "sampler (kernels/intersect.py); acceptance: factorized >= "
         "rejection updates/s on the dispatch-bound cell")
-    merge_json("BENCH_THROUGHPUT.json", {"order2_samplers": results})
+    mk = {"backend": jax.default_backend(), "workloads": {}}
+    for wname, spec in WORKLOADS.items():
+        mk["workloads"][wname] = _bench_megakernel_workload(wname, spec,
+                                                            seed)
+    mk["note"] = (
+        "fused rewalk-step megakernel (kernels/megakernel.py, DESIGN.md "
+        "§9) vs the unfused composed-primitive path, identical factorized "
+        "order-2 streams (bit-identical stores); fusion_stages are the "
+        "interpret twin's CUMULATIVE stage gates on one full-rewalk "
+        "fused_scan — deltas attribute time to decode/intersect/sample/"
+        "write-back; on CPU the fused cells measure dispatch-structure "
+        "wins only (VMEM locality needs the TPU kernel), losses recorded "
+        "as-is")
+    merge_json("BENCH_THROUGHPUT.json",
+               {"order2_samplers": results, "megakernel": mk})
     return results
 
 

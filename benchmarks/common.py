@@ -18,7 +18,7 @@ from repro.core import StreamingGraph, WalkConfig, generate_corpus
 from repro.core.baselines import IIEngine, TreeEngine
 from repro.core.update import WalkEngine
 from repro.core.walkers import WalkModel
-from repro.data.streams import rmat_edges
+from repro.data.streams import edge_batch_stream, rmat_edges
 
 ROWS: List[str] = []
 
@@ -158,6 +158,39 @@ def update_throughput(engine, bg: BenchGraph, batch_edges: int,
     if getattr(engine, "mav_overflowed", False):
         raise RuntimeError("MAV gather capacity overflow — resize mav_capacity")
     return walks_per_s, lat_us, total_aff / (n_batches - 1)
+
+
+def stream_throughput(make_engine: Callable[[], "WalkEngine"],
+                      bg: BenchGraph, batch_edges: int, n_batches: int = 4,
+                      seed: int = 9):
+    """Returns (walks_per_s, latency_us_per_walk, total_affected) of the
+    scan-pipelined `run_stream` driver (DESIGN.md §5): the whole
+    [n_batches, batch] stream in ONE jitted scan, timed end to end.
+
+    Takes an engine FACTORY: run_stream donates the engine's buffers, so
+    the compile pass and each timed repeat get a fresh engine (identical
+    key stream -> identical work)."""
+    key = jax.random.PRNGKey(seed)
+    k_stream, k_run = jax.random.split(key)
+    src, dst = edge_batch_stream(k_stream, n_batches, batch_edges,
+                                 bg.log2_n, bg.a, bg.b, bg.c, bg.d)
+
+    def once():
+        eng = make_engine()
+        t0 = time.perf_counter()
+        eng.run_stream(k_run, src, dst)
+        jax.block_until_ready(eng.store.code)
+        return time.perf_counter() - t0, eng
+
+    once()                       # compile pass (fresh engine)
+    dt, eng = once()
+    if eng.mav_overflowed:
+        raise RuntimeError("MAV gather capacity overflow — resize "
+                           "mav_capacity")
+    aff = eng.total_affected
+    if aff == 0:
+        return 0.0, 0.0, 0
+    return aff / dt, 1e6 * dt / aff, aff
 
 
 def scratch_throughput(g: StreamingGraph, cfg: WalkConfig, seed=3) -> float:

@@ -43,6 +43,12 @@ class WharfStreamConfig:
     # intersect (factorized-sampler) backend registry selection: same
     # resolution rules as find_next_backend (DESIGN.md §8)
     intersect_backend: str = "auto"
+    # fused rewalk-step megakernel (DESIGN.md §9): "auto" consults the
+    # kernels/megakernel registry whose process default is OFF (the unfused
+    # composed-primitive path) — fusion is strictly opt-in; set "pallas" /
+    # "interpret" / "pallas-interpret" / "xla-ref" to enable, "off" to pin
+    # the unfused path regardless of the registry.
+    megakernel: str = "auto"
 
     def walk_config(self) -> WalkConfig:
         return WalkConfig(n_walks_per_vertex=self.n_walks_per_vertex,
@@ -50,7 +56,8 @@ class WharfStreamConfig:
                           model=WalkModel(order=self.order,
                                           sampler=self.sampler,
                                           dmax=self.sampler_dmax),
-                          chunk_b=self.chunk_b)
+                          chunk_b=self.chunk_b,
+                          megakernel=self.megakernel)
 
     def select_backend(self) -> str:
         """Install this config's FINDNEXT + intersect backends as the
@@ -59,7 +66,7 @@ class WharfStreamConfig:
         untouched (no side effect on backends another component installed —
         the contract launch/steps relies on)."""
         from repro.core import packed_store
-        from repro.kernels import intersect
+        from repro.kernels import intersect, megakernel
         if self.find_next_backend != "auto":
             # the candidate window rides the explicit FINDNEXT choice: an
             # intersect-only explicit config must not reset another
@@ -68,6 +75,11 @@ class WharfStreamConfig:
             packed_store.set_default_window(self.find_next_window)
         if self.intersect_backend != "auto":
             intersect.set_default_backend(self.intersect_backend)
+        if self.megakernel != "auto":
+            # also installed as the registry default so components that
+            # build their own WalkConfig (benchmark drivers) inherit it;
+            # the walk_config() field above is the authoritative selection
+            megakernel.set_default_backend(self.megakernel)
         return packed_store.get_default_backend()
 
 
@@ -111,6 +123,15 @@ WHARF_SHAPES = {
                                       n_batches=8, merge_impl="interleave",
                                       merge_policy="on-demand", order=2,
                                       sampler="factorized"),
+    # fused rewalk step (DESIGN.md §9): the step-centric megakernel on the
+    # same pipelined factorized cell — FINDNEXT decode + intersection +
+    # sampling + write-back as ONE dispatch per step ("pallas" resolves to
+    # the interpreted kernel math off-TPU)
+    "stream_10k_n2v_megakernel": dict(kind="walk_stream", batch_edges=10_000,
+                                      n_batches=8, merge_impl="interleave",
+                                      merge_policy="on-demand", order=2,
+                                      sampler="factorized",
+                                      megakernel="pallas"),
 }
 
 register(ArchSpec(name="wharf-stream", family="wharf", make_config=_wharf,

@@ -27,6 +27,11 @@ class WalkConfig(NamedTuple):
     length: int = 80               # l   (paper default)
     model: WalkModel = DEEPWALK
     chunk_b: int = 128
+    # fused rewalk-step backend: "auto" consults the kernels/megakernel
+    # registry (process default: off -> the unfused composed-primitive
+    # path), or an explicit "off" / megakernel backend name. Static jit
+    # argument of core.update._rewalk, so changing it retraces naturally.
+    megakernel: str = "auto"
 
 
 def walk_start_vertex(w, n_w: int):

@@ -51,6 +51,7 @@ from repro.core.overlay import Overlay
 from repro.core.store import WalkStore, PAD_EPOCH
 from repro.core.utils import compact_nonzero
 from repro.core.walkers import sample_next
+from repro.kernels import megakernel
 
 U64 = jnp.uint64
 U32 = jnp.uint32
@@ -542,48 +543,68 @@ def _rewalk(key, graph: StreamingGraph, store: WalkStore,
     walk the vertex AT p_min is kept (mav.v_min) and positions p_min+1..l-1
     are re-sampled; triplets at positions p_min..l-1 are re-encoded (the
     triplet at p_min changes its next-pointer; the terminal one points to
-    itself)."""
+    itself).
+
+    When `cfg.megakernel` selects a fused backend (registry default: off),
+    the per-step FINDNEXT decode + intersection + sampling + write-back run
+    as ONE fused dispatch per step (kernels/megakernel.py) with prefix
+    traversal folded into the scan carry — emitted triplets are
+    bit-identical to the unfused path on the same key
+    (tests/test_megakernel.py), so every driver inherits the fusion from
+    the config alone."""
     length = store.length
     affected = mav.p_min < length
     walk_ids, lane_valid = compact_nonzero(affected, size=capacity)
     walk_ids = walk_ids.astype(U32)
     p_min = mav.p_min[walk_ids]
     v_at_pmin = mav.v_min[walk_ids]
-
-    if cfg.model.order == 2:
-        start = walk_start_vertex(walk_ids, cfg.n_walks_per_vertex)
-        # O(p_min) FINDNEXTs per walk; paper notes the same requirement.
-        # The prefix must reflect base + pending (earlier version blocks may
-        # have rewritten prefix slots), so it reads through the overlay —
-        # this is what lets node2vec streams run without per-batch merges.
-        view = store if pending is None else Overlay.build(store, pending)
-        prefix = view.traverse(walk_ids, start, length - 1)
-        prev0 = prefix[jnp.arange(capacity), jnp.maximum(p_min - 1, 0)]
-    else:
-        prev0 = v_at_pmin
-
-    w64 = walk_ids.astype(U64)
-    l64 = jnp.asarray(length, U64)
-
-    def step(carry, inp):
-        cur, prev = carry
-        p, kp = inp
-        cur = jnp.where(p == p_min, v_at_pmin, cur)
-        nxt = sample_next(kp, graph, cur, prev, cfg.model)
-        is_term = p == length - 1
-        nxt_eff = jnp.where(is_term, cur, nxt)
-        code = pairing.szudzik_pair(w64 * l64 + p.astype(U64),
-                                    nxt_eff.astype(U64))
-        emit = lane_valid & (p >= p_min)
-        owner = cur
-        prev_new = jnp.where(p >= p_min, cur, prev)
-        cur_new = jnp.where((p >= p_min) & ~is_term, nxt, cur)
-        return (cur_new, prev_new), (owner, code, emit)
-
-    keys = jax.random.split(key, length)
     ps = jnp.arange(length, dtype=I32)
-    (_, _), (owners, codes, emits) = jax.lax.scan(
-        step, (v_at_pmin, prev0), (ps, keys))
+
+    req = (cfg.megakernel if cfg.megakernel != "auto"
+           else megakernel.default_backend_request())
+    backend = megakernel.resolve_backend(req)
+
+    if backend is not None:
+        megakernel.check_supported(store, cfg, backend)
+        owners, codes, emits = megakernel.fused_scan(
+            key, graph, store, pending, walk_ids, lane_valid, p_min,
+            v_at_pmin, cfg, backend)
+    else:
+        if cfg.model.order == 2:
+            start = walk_start_vertex(walk_ids, cfg.n_walks_per_vertex)
+            # O(p_min) FINDNEXTs per walk; paper notes the same requirement.
+            # The prefix must reflect base + pending (earlier version blocks
+            # may have rewritten prefix slots), so it reads through the
+            # overlay — this is what lets node2vec streams run without
+            # per-batch merges.
+            view = (store if pending is None
+                    else Overlay.build(store, pending))
+            prefix = view.traverse(walk_ids, start, length - 1)
+            prev0 = prefix[jnp.arange(capacity), jnp.maximum(p_min - 1, 0)]
+        else:
+            prev0 = v_at_pmin
+
+        w64 = walk_ids.astype(U64)
+        l64 = jnp.asarray(length, U64)
+
+        def step(carry, inp):
+            cur, prev = carry
+            p, kp = inp
+            cur = jnp.where(p == p_min, v_at_pmin, cur)
+            nxt = sample_next(kp, graph, cur, prev, cfg.model)
+            is_term = p == length - 1
+            nxt_eff = jnp.where(is_term, cur, nxt)
+            code = pairing.szudzik_pair(w64 * l64 + p.astype(U64),
+                                        nxt_eff.astype(U64))
+            emit = lane_valid & (p >= p_min)
+            owner = cur
+            prev_new = jnp.where(p >= p_min, cur, prev)
+            cur_new = jnp.where((p >= p_min) & ~is_term, nxt, cur)
+            return (cur_new, prev_new), (owner, code, emit)
+
+        keys = jax.random.split(key, length)
+        (_, _), (owners, codes, emits) = jax.lax.scan(
+            step, (v_at_pmin, prev0), (ps, keys))
     owners = owners.T.reshape(-1)        # [capacity * l]
     codes = codes.T.reshape(-1)
     emits = emits.T.reshape(-1)

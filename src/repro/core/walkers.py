@@ -28,8 +28,12 @@ DESIGN.md §8, statistical contract tested in tests/test_walk_stats.py):
     kernel in kernels/intersect.py (four-backend registry, CPU-validated).
     Two uniform draws, no rejection loop in the hot stream_step path.
     Windows are `dmax` wide: lanes where deg(v) or deg(prev) exceed dmax
-    fall back to the rejection sampler (lax.cond — the fallback trace runs
-    only when an overflowing lane exists in the batch).
+    fall back to the rejection sampler. The fallback draws with PER-LANE
+    keys (fold_in(key, lane_id)), so its selections depend only on
+    (key, lane_id) — never on how many other lanes overflowed — and the
+    overflowed lanes can be compacted into a small side-batch
+    (`rejection_fallback`) whose cost is proportional to the overflow
+    count, bit-identical to re-running the whole batch.
 """
 from __future__ import annotations
 
@@ -39,10 +43,16 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.utils import compact_nonzero
 from repro.kernels import intersect
 
 U32 = jnp.uint32
 I32 = jnp.int32
+
+# side-batch rows per batch row: the compacted fallback handles up to
+# ceil(b / _FALLBACK_SIDE_DIV) overflowed lanes before degrading to the
+# whole-batch re-run (still per-lane keyed, so results stay identical)
+_FALLBACK_SIDE_DIV = 8
 
 
 class WalkModel(NamedTuple):
@@ -93,6 +103,78 @@ def _node2vec_step(key, graph, v, prev, p, q, n_trials):
     return chosen
 
 
+@partial(jax.jit, static_argnames=("n_trials",))
+def _node2vec_step_perlane(key, graph, v, prev, p, q, n_trials, lane_ids):
+    """Rejection sampling with draws keyed by (key, lane_id) alone.
+
+    Unlike `_node2vec_step` (whose split(key, n_trials) draws depend on
+    batch shape and lane position), every draw here comes from
+    fold_in(key, lane_id): a lane's selection is invariant under batch
+    compaction, which is what lets `rejection_fallback` run overflowed
+    lanes in a side-batch bit-identically to a whole-batch re-run."""
+    inv_p = 1.0 / p
+    inv_q = 1.0 / q
+    a_max = jnp.maximum(jnp.maximum(inv_p, 1.0), inv_q)
+    lane_keys = jax.vmap(lambda i: jax.random.fold_in(key, i))(lane_ids)
+
+    def lane(lk, vv, pv):
+        def trial(carry, k):
+            chosen, done = carry
+            k1, k2 = jax.random.split(k)
+            x = graph.sample_neighbor(k1, vv)
+            alpha = jnp.where(
+                x == pv, inv_p,
+                jnp.where(graph.has_edge(pv, x), 1.0, inv_q))
+            accept = jax.random.uniform(k2, ()) * a_max <= alpha
+            chosen = jnp.where(done, chosen, x)
+            return (chosen, done | accept), None
+
+        keys = jax.random.split(lk, n_trials)
+        (chosen, _), _ = jax.lax.scan(
+            trial, (vv, jnp.asarray(False)), keys)
+        return chosen
+
+    return jax.vmap(lane)(lane_keys, v, prev)
+
+
+def rejection_fallback(key, graph, v, prev, overflow, nxt, p, q, n_trials,
+                       side_rows: int | None = None):
+    """Replace `nxt` on overflowed lanes with per-lane rejection samples.
+
+    Three-tier cond: no overflow -> identity trace; overflow count fits the
+    side-batch -> compact the overflowed lanes into `side_rows` lanes and
+    scatter the samples back; otherwise re-run every lane. All tiers use
+    `_node2vec_step_perlane`, whose draws depend only on (key, lane index),
+    so the tiers are bit-identical wherever overflow is True."""
+    b = v.shape[0]
+    side = side_rows if side_rows is not None else max(1, -(-b // _FALLBACK_SIDE_DIV))
+    side = min(side, b)
+    lane_ids = jnp.arange(b, dtype=I32)
+    n_over = jnp.sum(overflow)
+
+    def side_batch(_):
+        idx, valid = compact_nonzero(overflow, side)
+        rej = _node2vec_step_perlane(key, graph, v[idx], prev[idx], p, q,
+                                     n_trials, lane_ids[idx])
+        # padding rows (valid=False) carry lane 0's data; route them to an
+        # out-of-range index so mode="drop" discards them
+        scatter_idx = jnp.where(valid, idx, b)
+        return nxt.at[scatter_idx].set(jnp.where(valid, rej, 0), mode="drop")
+
+    def whole_batch(_):
+        rej = _node2vec_step_perlane(key, graph, v, prev, p, q, n_trials,
+                                     lane_ids)
+        return jnp.where(overflow, rej, nxt)
+
+    def with_fallback(_):
+        if side >= b:
+            return whole_batch(None)
+        return jax.lax.cond(n_over <= side, side_batch, whole_batch, None)
+
+    return jax.lax.cond(jnp.any(overflow), with_fallback, lambda _: nxt,
+                        None)
+
+
 def _neighbor_window(graph, v, dmax: int):
     """Sentinel-padded neighbor window: (nbrs u32 [B, dmax], deg i32 [B]).
 
@@ -126,13 +208,8 @@ def _node2vec_factorized_step(key, graph, v, prev, p, q, n_trials, dmax,
         backend=backend)
     nxt = jnp.where(found, nxt, v)  # isolated vertices stay in place
     overflow = (deg_v > dmax) | (deg_p > dmax)
-
-    def with_fallback(_):
-        rej = _node2vec_step(k_fb, graph, v, prev, p, q, n_trials)
-        return jnp.where(overflow, rej, nxt)
-
-    return jax.lax.cond(jnp.any(overflow), with_fallback, lambda _: nxt,
-                        None)
+    return rejection_fallback(k_fb, graph, v, prev, overflow, nxt, p, q,
+                              n_trials)
 
 
 def sample_next(key, graph, v, prev, model: WalkModel):

@@ -506,13 +506,16 @@ def _wharf_plan(arch, cfg, info, mesh, shape_name) -> CellPlan:
 
     from repro.kernels.delta import CHUNK, WORDS
 
-    if "order" in info or "sampler" in info:
+    if "order" in info or "sampler" in info or "megakernel" in info:
         # per-shape walk-model overrides (the order-2 sampler comparison
-        # cells): WharfStreamConfig is a frozen dataclass, so derive a copy
+        # cells and the fused-megakernel cell): WharfStreamConfig is a
+        # frozen dataclass, so derive a copy
         import dataclasses as _dc
         cfg = _dc.replace(cfg, order=info.get("order", cfg.order),
-                          sampler=info.get("sampler", cfg.sampler))
-    if cfg.find_next_backend != "auto" or cfg.intersect_backend != "auto":
+                          sampler=info.get("sampler", cfg.sampler),
+                          megakernel=info.get("megakernel", cfg.megakernel))
+    if (cfg.find_next_backend != "auto" or cfg.intersect_backend != "auto"
+            or cfg.megakernel != "auto"):
         # explicit config choice -> install process-wide; default "auto"
         # configs leave the registries untouched (select_backend skips
         # "auto" fields, so neither registry is clobbered by the other's

@@ -1,0 +1,236 @@
+"""Fused rewalk-step megakernel tests (DESIGN.md §9).
+
+The contract: with `WalkConfig.megakernel` selecting any backend, the engine
+produces BIT-identical stores to the unfused composed-primitive path on the
+same key stream — across insert+delete streams, both walk models, both
+order-2 samplers, tile-boundary and off-tile factorized windows, and lanes
+that take the lane-compaction rejection fallback. Kernel backends must raise
+(not silently fall back) when an off-tile shape would bypass the kernel."""
+import types
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import StreamingGraph, WalkConfig, generate_corpus
+from repro.core import packed_store
+from repro.core.update import WalkEngine
+from repro.core.walkers import (WalkModel, _node2vec_step_perlane,
+                                rejection_fallback)
+from repro.data.streams import mixed_edge_stream, rmat_edges
+from repro.kernels import megakernel
+
+U32 = jnp.uint32
+
+LOG2_N = 6
+N = 2 ** LOG2_N
+
+
+def make_engine(megak, order=1, sampler="rejection", dmax=64, length=8,
+                n_w=2, seed=0, log2_n=LOG2_N, n_edges=300):
+    n = 2 ** log2_n
+    src, dst = rmat_edges(jax.random.PRNGKey(seed), n_edges, log2_n)
+    g = StreamingGraph.from_edges(src, dst, n, 4096)
+    model = (WalkModel(order=order, p=0.5, q=2.0, sampler=sampler, dmax=dmax)
+             if order == 2 else WalkModel())
+    cfg = WalkConfig(n_walks_per_vertex=n_w, length=length, model=model,
+                     megakernel=megak)
+    store = generate_corpus(jax.random.PRNGKey(seed + 1), g, cfg)
+    return WalkEngine(graph=g, store=store, cfg=cfg,
+                      merge_policy="on-demand", merge_impl="interleave",
+                      rewalk_capacity=n * n_w, max_pending=3)
+
+
+def run_stream_store(megak, order=1, sampler="rejection", dmax=64,
+                     n_batches=3, length=None, **kw):
+    if length is None:
+        length = 6 if order == 2 else 8
+    eng = make_engine(megak, order=order, sampler=sampler, dmax=dmax,
+                      length=length, **kw)
+    ins_s, ins_d, del_s, del_d = mixed_edge_stream(
+        jax.random.PRNGKey(7), n_batches, 10, 4, LOG2_N)
+    eng.run_stream(jax.random.PRNGKey(11), ins_s, ins_d, del_s, del_d)
+    eng.merge()
+    return eng.store
+
+
+def assert_stores_identical(s1, s2, msg=""):
+    for f in ("owner", "code", "epoch", "offsets", "vmin", "vmax",
+              "slot_epoch", "packed", "widths"):
+        np.testing.assert_array_equal(np.asarray(getattr(s1, f)),
+                                      np.asarray(getattr(s2, f)),
+                                      err_msg=f"{msg}:{f}")
+
+
+# ---------------------------------------------- fused == unfused, bit-exact
+
+
+_MODELS = {
+    "deepwalk": dict(order=1),
+    "n2v-rejection": dict(order=2, sampler="rejection"),
+    # dmax=64 is off-tile (< one 128 lane) — the interpret math must handle
+    # untiled windows; dmax=8 overflows many lanes, so the in-scan
+    # lane-compaction rejection fallback is exercised on real data
+    "n2v-factorized": dict(order=2, sampler="factorized", dmax=64),
+    "n2v-factorized-overflow": dict(order=2, sampler="factorized", dmax=8),
+}
+
+
+@pytest.mark.parametrize("backend,model", [
+    ("interpret", "deepwalk"),
+    ("interpret", "n2v-rejection"),
+    ("interpret", "n2v-factorized"),
+    ("interpret", "n2v-factorized-overflow"),
+    ("xla-ref", "deepwalk"),
+    ("xla-ref", "n2v-factorized"),
+    # "pallas" must resolve to the interpreted kernel math off-TPU
+    ("pallas", "n2v-factorized"),
+])
+def test_fused_matches_unfused(backend, model):
+    """Insert+delete streams through run_stream: the fused engine's merged
+    store is bit-identical to megakernel='off' on the same key."""
+    ref = run_stream_store("off", **_MODELS[model])
+    fused = run_stream_store(backend, **_MODELS[model])
+    assert_stores_identical(ref, fused, msg=f"{backend}/{model}")
+
+
+def test_pallas_interpret_kernel_body():
+    """pl.pallas_call(interpret=True) runs the REAL kernel body (grid,
+    BlockSpec indexing, scalar pack, accumulator refs) — tiny shapes, both
+    kernel modes, at the tile boundary dmax=128."""
+    win = packed_store.get_default_window()
+    packed_store.set_default_window(2)
+    try:
+        for order, sampler in ((1, "rejection"), (2, "factorized")):
+            kw = dict(order=order, sampler=sampler, dmax=128, length=4,
+                      n_w=1, log2_n=4, n_edges=60)
+            ins_s, ins_d, del_s, del_d = mixed_edge_stream(
+                jax.random.PRNGKey(7), 2, 6, 2, 4)
+            stores = []
+            for megak in ("off", "pallas-interpret"):
+                eng = make_engine(megak, **kw)
+                eng.run_stream(jax.random.PRNGKey(11), ins_s, ins_d,
+                               del_s, del_d)
+                eng.merge()
+                stores.append(eng.store)
+            assert_stores_identical(*stores, msg=f"kernel/{order}/{sampler}")
+    finally:
+        packed_store.set_default_window(win)
+
+
+# --------------------------------------------------------- guards, registry
+
+
+def test_explicit_kernel_raises_off_tile():
+    """A kernel-backend request with an off-tile factorized window must
+    raise, never silently validate a fallback."""
+    eng = make_engine("pallas-interpret", order=2, sampler="factorized",
+                      dmax=64, length=6)
+    with pytest.raises(ValueError, match="dmax"):
+        eng.insert_edges(jax.random.PRNGKey(0),
+                         jnp.asarray([1], U32), jnp.asarray([2], U32))
+
+
+def test_u32_target_guard():
+    """Corpora whose slot ids exceed u32 refuse every kernel-math backend
+    (the in-kernel f match is u32) but pass the composed-primitive oracle."""
+    big = types.SimpleNamespace(n_walks=1 << 20, length=1 << 13)
+    cfg = types.SimpleNamespace(model=WalkModel())
+    for b in ("pallas", "interpret", "pallas-interpret"):
+        with pytest.raises(ValueError, match="u32"):
+            megakernel.check_supported(big, cfg, b)
+    megakernel.check_supported(big, cfg, "xla-ref")  # oracle: no limit
+
+
+def test_registry_roundtrip():
+    """Registry default is OFF; installs resolve as requested; 'auto'
+    selection in WalkConfig consults the registry at trace time."""
+    assert megakernel.default_backend_request() is None
+    assert megakernel.resolve_backend("auto") is None
+    assert megakernel.resolve_backend(None) is None
+    assert megakernel.resolve_backend("off") is None
+    with pytest.raises(ValueError):
+        megakernel.resolve_backend("nope")
+    with pytest.raises(ValueError):
+        megakernel.set_default_backend("nope")
+    try:
+        megakernel.set_default_backend("interpret")
+        assert megakernel.resolve_backend("auto") == "interpret"
+        # length=7 is unique to this test: a fresh jit trace is guaranteed,
+        # so the 'auto' config picks up the just-installed registry default
+        ref = run_stream_store("off", order=1, length=7, n_batches=2)
+        auto = run_stream_store("auto", order=1, length=7, n_batches=2)
+        assert_stores_identical(ref, auto, msg="registry-auto")
+    finally:
+        megakernel.set_default_backend(None)
+    assert megakernel.resolve_backend("auto") is None
+
+
+def test_stage_gating_is_interpret_only():
+    """Per-fusion-stage gating is a bench instrument of the interpret twin;
+    kernel/oracle backends must refuse it."""
+    eng = make_engine("off", order=1)
+    with pytest.raises(ValueError, match="stage"):
+        megakernel.fused_scan(
+            jax.random.PRNGKey(0), eng.graph, eng.store, None,
+            jnp.zeros((4,), U32), jnp.zeros((4,), bool),
+            jnp.zeros((4,), jnp.int32), jnp.zeros((4,), U32),
+            eng.cfg, "xla-ref", stages="decode")
+
+
+# ------------------------------------- lane-compaction rejection fallback
+
+
+def test_rejection_fallback_bit_identical():
+    """The compacted side-batch, the whole-batch re-run, and a direct
+    per-lane evaluation all select the SAME vertices on overflowed lanes:
+    fallback draws depend only on (key, lane_id), never on how many lanes
+    overflowed or how they were batched."""
+    src, dst = rmat_edges(jax.random.PRNGKey(3), 300, LOG2_N)
+    g = StreamingGraph.from_edges(src, dst, N, 4096)
+    b = 64
+    key = jax.random.PRNGKey(5)
+    kv, kp2 = jax.random.split(key)
+    v = jax.random.randint(kv, (b,), 0, N).astype(U32)
+    prev = jax.random.randint(kp2, (b,), 0, N).astype(U32)
+    nxt0 = jnp.arange(b, dtype=U32) + 1000   # marker: untouched lanes keep it
+    overflow = jnp.zeros((b,), bool).at[jnp.asarray([3, 17, 30])].set(True)
+
+    full = _node2vec_step_perlane(key, g, v, prev, 0.5, 2.0, 8,
+                                  jnp.arange(b, dtype=jnp.int32))
+    expected = jnp.where(overflow, full, nxt0)
+
+    # default: 3 overflowed lanes fit the ceil(64/8)=8-row side-batch
+    out_side = rejection_fallback(key, g, v, prev, overflow, nxt0, 0.5, 2.0, 8)
+    np.testing.assert_array_equal(np.asarray(out_side), np.asarray(expected))
+    # forced whole-batch re-run (side_rows >= b)
+    out_whole = rejection_fallback(key, g, v, prev, overflow, nxt0, 0.5, 2.0,
+                                   8, side_rows=b)
+    np.testing.assert_array_equal(np.asarray(out_whole), np.asarray(expected))
+    # side-batch too small for the count -> degrades to whole-batch, same bits
+    out_tiny = rejection_fallback(key, g, v, prev, overflow, nxt0, 0.5, 2.0,
+                                  8, side_rows=2)
+    np.testing.assert_array_equal(np.asarray(out_tiny), np.asarray(expected))
+    # no overflow -> identity
+    none = jnp.zeros((b,), bool)
+    out_none = rejection_fallback(key, g, v, prev, none, nxt0, 0.5, 2.0, 8)
+    np.testing.assert_array_equal(np.asarray(out_none), np.asarray(nxt0))
+
+
+def test_perlane_draws_invariant_under_compaction():
+    """A lane's per-lane-keyed rejection draw is unchanged when the lane is
+    evaluated inside a compacted sub-batch (the property the side-batch
+    scatter relies on)."""
+    src, dst = rmat_edges(jax.random.PRNGKey(3), 300, LOG2_N)
+    g = StreamingGraph.from_edges(src, dst, N, 4096)
+    b = 32
+    key = jax.random.PRNGKey(9)
+    v = jax.random.randint(key, (b,), 0, N).astype(U32)
+    prev = jnp.roll(v, 1)
+    lane_ids = jnp.arange(b, dtype=jnp.int32)
+    full = _node2vec_step_perlane(key, g, v, prev, 0.5, 2.0, 8, lane_ids)
+    sub = jnp.asarray([2, 9, 23], jnp.int32)
+    part = _node2vec_step_perlane(key, g, v[sub], prev[sub], 0.5, 2.0, 8,
+                                  lane_ids[sub])
+    np.testing.assert_array_equal(np.asarray(part), np.asarray(full[sub]))
