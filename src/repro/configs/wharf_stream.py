@@ -43,6 +43,14 @@ class WharfStreamConfig:
     # intersect (factorized-sampler) backend registry selection: same
     # resolution rules as find_next_backend (DESIGN.md §8)
     intersect_backend: str = "auto"
+    # explicit shard_map partition (distr/sharded.py, DESIGN.md §4): the
+    # 1-D 'shard' mesh size and the per-shard capacities of the vertex-range
+    # partition; 0 = derive balanced defaults (2x the uniform share, rounded
+    # to the 128-code packed-chunk multiple) via ShardSpec.create
+    n_shards: int = 8
+    shard_edge_capacity: int = 0
+    shard_store_capacity: int = 0
+    handoff_slab: int = 0
     # fused rewalk-step megakernel (DESIGN.md §9): "auto" consults the
     # kernels/megakernel registry whose process default is OFF (the unfused
     # composed-primitive path) — fusion is strictly opt-in; set "pallas" /
@@ -58,6 +66,28 @@ class WharfStreamConfig:
                                           dmax=self.sampler_dmax),
                           chunk_b=self.chunk_b,
                           megakernel=self.megakernel)
+
+    def shard_spec(self, n_shards: int = 0):
+        """The explicit-partition ShardSpec this config describes
+        (distr/sharded.py). `n_shards` overrides the config field — the
+        launcher passes the actual mesh size so one config serves the
+        8-device bench mesh and the 512-device dry-run mesh."""
+        import dataclasses as _dc
+
+        from repro.distr.sharded import ShardSpec
+        s = n_shards or self.n_shards
+        t = self.n_vertices * self.n_walks_per_vertex * self.length
+        spec = ShardSpec.create(s, self.n_vertices, t, self.edge_capacity,
+                                self.rewalk_capacity)
+        kw = {}
+        if self.shard_edge_capacity:
+            kw["edge_capacity"] = self.shard_edge_capacity
+        if self.shard_store_capacity:
+            kw["store_capacity"] = self.shard_store_capacity
+            kw["mav_capacity"] = self.shard_store_capacity
+        if self.handoff_slab:
+            kw["slab"] = self.handoff_slab
+        return _dc.replace(spec, **kw) if kw else spec
 
     def select_backend(self) -> str:
         """Install this config's FINDNEXT + intersect backends as the
@@ -112,6 +142,19 @@ WHARF_SHAPES = {
                                        batch_edges=10_000, n_batches=8,
                                        merge_impl="interleave",
                                        merge_policy="eager"),
+    # mixed insert+delete stream through the same pipelined driver
+    # (`del_edges` rides along as a second stacked stream)
+    "stream_10k_mixed": dict(kind="walk_stream", batch_edges=10_000,
+                             del_edges=2_000, n_batches=8,
+                             merge_impl="interleave",
+                             merge_policy="on-demand"),
+    # explicitly partitioned engine (distr/sharded.py): shard_map over the
+    # production mesh re-viewed as a flat 1-D 'shard' axis, hand-written
+    # pmin MAV combine + all_to_all walk handoff instead of GSPMD's
+    # inferred all-gathers
+    "stream_10k_sharded": dict(kind="walk_stream_sharded",
+                               batch_edges=10_000, del_edges=2_000,
+                               n_batches=8, merge_policy="on-demand"),
     # order-2 streaming cells: the K-trial rejection sampler vs the exact
     # factorized sampler (DESIGN.md §8) on the same pipelined driver —
     # `order`/`sampler` override the config fields per shape (launch/steps)

@@ -38,6 +38,42 @@ def walk_start_vertex(w, n_w: int):
     return (jnp.asarray(w, U32) // jnp.asarray(n_w, U32)).astype(U32)
 
 
+def compact_lanes_by_shard(dest, n_shards: int, slab: int):
+    """Bucket rewalk lanes by destination owner shard into fixed-size slabs.
+
+    dest: int32[capacity] — destination shard id per lane; `n_shards` marks
+    an inactive lane. Returns (send_lane int32[n_shards, slab], overflow):
+    row d lists the lane indices routed to shard d (sentinel = capacity for
+    unused slab slots), each row ordered by ascending lane index, and
+    `overflow` flags any destination receiving more than `slab` lanes
+    (overflowing lanes are dropped — callers treat this as a sticky
+    correctness flag, the same deferred-overflow contract as the MAV
+    gather).
+
+    This is the pure lane-compaction half of the cross-shard walk handoff
+    (distr/handoff.py does the collective exchange): O(capacity log
+    capacity) sort-based bucketing whose op count is independent of
+    `n_shards`, so the same trace serves an 8-device bench mesh and a
+    512-device dry-run mesh."""
+    capacity = dest.shape[0]
+    dest = jnp.asarray(dest, jnp.int32)
+    # stable grouping: lanes sorted by dest keep ascending lane order within
+    # each destination bucket
+    order = jnp.argsort(dest, stable=True).astype(jnp.int32)
+    sdest = dest[order]
+    start = jnp.searchsorted(sdest, jnp.arange(n_shards + 1, dtype=jnp.int32),
+                             side="left").astype(jnp.int32)
+    counts = start[1:] - start[:-1]
+    overflow = jnp.any(counts > slab)
+    rank = jnp.arange(capacity, dtype=jnp.int32) - start[
+        jnp.clip(sdest, 0, n_shards)]
+    ok = (sdest < n_shards) & (rank < slab)
+    slot = jnp.where(ok, sdest * slab + rank, n_shards * slab)
+    send_lane = jnp.full((n_shards * slab,), capacity, jnp.int32)
+    send_lane = send_lane.at[slot].set(order, mode="drop")
+    return send_lane.reshape(n_shards, slab), overflow
+
+
 def generate_walk_matrix(key, graph: StreamingGraph, cfg: WalkConfig):
     """Dense [n_walks, l] walk matrix sampled from scratch on `graph`."""
     n_walks = graph.n_vertices * cfg.n_walks_per_vertex

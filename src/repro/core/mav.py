@@ -44,23 +44,50 @@ def _touched_vertices(store: WalkStore, ins_src, ins_dst, del_src, del_dst):
     return touched
 
 
-def _pmin_from_wpo(w, p, owner, epoch, slot_epoch, touched, valid,
-                   length: int, n_walks: int) -> MAV:
-    """MAV reduction from already-decoded (w, p, owner) entry columns."""
+def keyed_pmin(w, p, owner, epoch, slot_epoch, touched, valid,
+               length: int, n_walks: int):
+    """Per-walk composite-min keys: the associative half of the MAV reduction.
+
+    Returns int64[n_walks] keys `p * 2^32 + v_at_p` per walk, clamped to the
+    miss value `length * 2^32` (a walk with no live touched entry). The key
+    order is (p, owner)-lexicographic, so taking a MIN of keys — locally via
+    segment_min here, or ACROSS vertex-range shards via `lax.pmin` in the
+    explicitly partitioned engine (distr/sharded.py) — always selects the
+    same entry, with ties broken identically everywhere. `mav_from_keyed`
+    decomposes the combined keys back into (p_min, v_min)."""
     slot = jnp.clip(w * length + p, 0, n_walks * length - 1)
     live = epoch == slot_epoch[slot]
     hit = valid & live & touched
     w_safe = jnp.where(hit, w, 0)
-    # composite key p * n_vertices + owner -> argmin(p) carrying v at p_min
+    # composite key p * 2^32 + owner -> argmin(p) carrying v at p_min
     big = jnp.asarray(1 << 32, jnp.int64)
+    miss = jnp.asarray(length, jnp.int64) * big
     keyed = jnp.where(hit, p.astype(jnp.int64) * big + owner.astype(jnp.int64),
-                      jnp.asarray(length, jnp.int64) * big)
+                      miss)
     best = jax.ops.segment_min(keyed, w_safe, num_segments=n_walks)
-    # walks with no hit anywhere still need p_min = l
-    any_hit = jax.ops.segment_max(hit.astype(I32), w_safe, num_segments=n_walks) > 0
-    p_min = jnp.where(any_hit, (best // big).astype(I32), length)
-    v_min = jnp.where(any_hit, (best % big).astype(U32), 0)
+    # walks with no entry row at all get segment_min's +inf identity: clamp
+    # to the miss key so the decompose yields p_min = l, v_min = 0
+    return jnp.minimum(best, miss)
+
+
+def mav_from_keyed(best, length: int) -> MAV:
+    """Decompose combined `keyed_pmin` keys into the MAV columns.
+
+    The miss key `length * 2^32` decomposes to exactly (p_min=l, v_min=0) —
+    the unaffected-walk convention — so no separate any-hit mask is carried
+    through the (possibly cross-shard) min reduction."""
+    big = jnp.asarray(1 << 32, jnp.int64)
+    p_min = (best // big).astype(I32)
+    v_min = jnp.where(p_min < length, (best % big).astype(U32), 0)
     return MAV(p_min=p_min, v_min=v_min)
+
+
+def _pmin_from_wpo(w, p, owner, epoch, slot_epoch, touched, valid,
+                   length: int, n_walks: int) -> MAV:
+    """MAV reduction from already-decoded (w, p, owner) entry columns."""
+    best = keyed_pmin(w, p, owner, epoch, slot_epoch, touched, valid,
+                      length, n_walks)
+    return mav_from_keyed(best, length)
 
 
 def _pmin_from_entries(owner, code, epoch, slot_epoch, touched, valid,

@@ -428,6 +428,43 @@ _merge_state_jit = jax.jit(_merge_state,
                            static_argnames=("cfg", "merge_impl"))
 
 
+def consolidate(state: EngineState, cfg: WalkConfig,
+                merge_impl: str = "interleave") -> EngineState:
+    """PUBLIC merge entry point: fold every pending version block into the
+    base store and reset the accumulator (the paper's Merge as a pure
+    state -> state function).
+
+    This is the API external drivers build on (distr/engine.py calls it
+    after its sharded scan so the returned store is self-contained; the
+    stateful `WalkEngine.merge` is the same function behind a host-side
+    fill-level mirror). Merging an empty accumulator is a content no-op, so
+    callers may invoke it unconditionally at stream end."""
+    return _merge_state_jit(state, cfg, merge_impl)
+
+
+def run_stream(state: EngineState, keys, ins_src, ins_dst, del_src, del_dst,
+               *, cfg: WalkConfig, capacity: int, mav_capacity: int,
+               max_pending: int, merge_policy: str = "on-demand",
+               merge_impl: str = "interleave", with_masks: bool = False):
+    """PUBLIC scan-pipelined driver: a whole [n_batches, batch] mixed
+    insert+delete stream through `stream_step`, one jitted `lax.scan`.
+
+    The functional twin of `WalkEngine.run_stream` for callers that manage
+    `EngineState` directly (the distributed engine, notebooks): takes
+    per-batch `keys` ([n_batches, 2], i.e. `jax.random.split(key,
+    n_batches)`) and stacked streams, returns `(state, affected)` — or
+    `(state, (affected, UpdateAux))` with `with_masks=True`. Deletion
+    streams may be zero-width ([n_batches, 0]). The input `state` is DONATED
+    (in-place buffer reuse across the stream): prior references to its
+    buffers are invalidated."""
+    return _run_stream_jit(state, keys, ins_src, ins_dst, del_src, del_dst,
+                           cfg=cfg, capacity=capacity,
+                           mav_capacity=mav_capacity,
+                           max_pending=max_pending,
+                           merge_policy=merge_policy, merge_impl=merge_impl,
+                           with_masks=with_masks)
+
+
 def pending_after_stream(n_pending: int, n_batches: int, max_pending: int,
                          merge_policy: str) -> int:
     """Host-side pending fill level after `n_batches` `stream_step`s.

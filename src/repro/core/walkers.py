@@ -212,6 +212,33 @@ def _node2vec_factorized_step(key, graph, v, prev, p, q, n_trials, dmax,
                               n_trials)
 
 
+def sample_next_sharded(key, graph, v, model: WalkModel):
+    """SAMPLENEXT over the FULL lane vector against a vertex-range-local
+    graph — the per-shard half of the explicitly partitioned rewalk
+    (distr/sharded.py), bit-identical to the single-host stream.
+
+    Contract (what makes cross-shard draws line up): `deepwalk_step`'s one
+    uniform draw per lane is `randint(key, v.shape, 0, max(deg, 1))`, and
+    counter-based PRNG bits depend only on (key, shape, lane index) — NOT on
+    other lanes' maxval. So every shard calls this with the SAME key and the
+    SAME [capacity] lane shape as the single-host `_rewalk` scan; a shard
+    has correct `deg`/CSR data only for lanes whose current vertex it owns,
+    and exactly those lanes come out bit-identical to the single-host draw
+    (non-owned lanes produce garbage that the caller masks out). No
+    per-shard fold_in is needed — folding the shard id in would CHANGE the
+    single-host stream, which is the one thing the sharded engine must not
+    do.
+
+    Order-2 models need the previous vertex's neighbor segment, which may
+    live on another shard; until a remote-window exchange exists the sharded
+    engine is order-1 only."""
+    if model.order != 1:
+        raise NotImplementedError(
+            "sharded SAMPLENEXT is order-1 (DeepWalk) only: order-2 biases "
+            "need N(prev), which may be owned by another shard")
+    return deepwalk_step(key, graph, v)
+
+
 def sample_next(key, graph, v, prev, model: WalkModel):
     """SAMPLENEXT (paper Alg. 2 line 8), vectorized over a batch of walkers.
 

@@ -19,6 +19,11 @@ walk axis). `distributed_update_step` wraps one batch (the dry-run cell);
 device, exactly mirroring the single-host pipelined driver.
 tests/test_distr.py checks 8-device equivalence against the single-host
 engine on the same PRNG stream.
+
+This module is the IMPLICIT (compiler-partitioned) engine. Its explicitly
+partitioned twin — `shard_map` over a vertex-range partition with hand-
+written pmin/all_to_all collectives instead of GSPMD's inferred all-gathers
+— lives in distr/sharded.py (DESIGN.md §4 contrasts the two).
 """
 from __future__ import annotations
 
@@ -29,8 +34,8 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core.graph import StreamingGraph
 from repro.core.store import WalkStore
-from repro.core.update import (EngineState, PendingBlocks, _run_stream_jit,
-                               stream_step)
+from repro.core.update import (EngineState, PendingBlocks, consolidate,
+                               run_stream, stream_step)
 
 U64 = jnp.uint64
 U32 = jnp.uint32
@@ -91,10 +96,12 @@ def wharf_shardings(mesh, cfg) -> Tuple[Dict[str, Any], Dict[str, Any]]:
 
 def stream_shardings(mesh) -> Dict[str, Any]:
     """Shardings for the streaming inputs of `distributed_run_stream`:
-    batch streams and keys are small and consumed whole per step ->
-    replicate (the heavy state shardings come from `wharf_shardings`)."""
+    batch streams (insertions AND deletions) and keys are small and consumed
+    whole per step -> replicate (the heavy state shardings come from
+    `wharf_shardings`)."""
     r = NamedSharding(mesh, P())
-    return {"keys": r, "ins_src": r, "ins_dst": r}
+    return {"keys": r, "ins_src": r, "ins_dst": r, "del_src": r,
+            "del_dst": r}
 
 
 def _init_state(graph_d, store_d, cfg, max_pending: int,
@@ -112,8 +119,10 @@ def _init_state(graph_d, store_d, cfg, max_pending: int,
 
 def distributed_update_step(graph_d, store_d, ins_src, ins_dst, new_epoch,
                             key, cfg, merge_impl: str = "interleave",
-                            do_merge: bool = True):
-    """One edge batch -> updated store (Algorithm 2), pure fn.
+                            do_merge: bool = True, del_src=None,
+                            del_dst=None):
+    """One edge batch (insertions + optional deletions) -> updated store
+    (Algorithm 2), pure fn.
 
     Runs the shared `stream_step` with a one-row pending accumulator:
     do_merge=True is the eager policy (append + merge, the paper-faithful
@@ -121,12 +130,15 @@ def distributed_update_step(graph_d, store_d, ins_src, ins_dst, new_epoch,
     (merge-free) batch for amortized accounting — the version block stays in
     the accumulator and only the slot-epoch bumps reach the returned store.
     merge_impl: "lexsort" = paper-faithful bulk sort; "interleave" = O(T)
-    positional merge (§Perf)."""
+    positional merge (§Perf). Deletions arrive as trailing keyword args so
+    existing positional call sites keep working."""
     state = _init_state(graph_d, store_d, cfg, max_pending=1,
                         epoch0=new_epoch.astype(U32) - jnp.asarray(1, U32))
     empty = jnp.zeros((0,), U32)
+    del_src = empty if del_src is None else del_src
+    del_dst = empty if del_dst is None else del_dst
     state = stream_step(
-        state, key, ins_src, ins_dst, empty, empty, cfg.walk_config(),
+        state, key, ins_src, ins_dst, del_src, del_dst, cfg.walk_config(),
         capacity=cfg.rewalk_capacity, mav_capacity=state.store.size,
         max_pending=1, merge_policy="eager" if do_merge else "on-demand",
         merge_impl=merge_impl)
@@ -136,8 +148,10 @@ def distributed_update_step(graph_d, store_d, ins_src, ins_dst, new_epoch,
 def distributed_run_stream(graph_d, store_d, keys, ins_src, ins_dst, cfg,
                            merge_impl: str = "interleave",
                            merge_policy: str = "on-demand",
-                           max_pending: int = 8):
-    """A whole [n_batches, batch] insertion stream in one sharded scan.
+                           max_pending: int = 8, del_src=None, del_dst=None):
+    """A whole [n_batches, batch] mixed insert+delete stream in one sharded
+    scan (deletion streams optional, trailing keywords — zero-width when
+    omitted).
 
     The distributed twin of `WalkEngine.run_stream`: same `stream_step`,
     same donation, overflow/affected accumulated on device. Returns
@@ -157,12 +171,13 @@ def distributed_run_stream(graph_d, store_d, keys, ins_src, ins_dst, cfg,
     state = _init_state(graph_d, store_d, cfg, max_pending=max_pending,
                         epoch0=jnp.max(store.slot_epoch))
     n_batches = ins_src.shape[0]
-    empty = jnp.zeros((n_batches, 0), U32)
-    state, affected = _run_stream_jit(
-        state, keys, ins_src, ins_dst, empty, empty,
+    if del_src is None:
+        del_src = jnp.zeros((n_batches, 0), U32)
+        del_dst = jnp.zeros((n_batches, 0), U32)
+    state, affected = run_stream(
+        state, keys, ins_src, ins_dst, del_src, del_dst,
         cfg=cfg.walk_config(), capacity=cfg.rewalk_capacity,
         mav_capacity=state.store.size, max_pending=max_pending,
         merge_policy=merge_policy, merge_impl=merge_impl)
-    from repro.core.update import _merge_state
-    state = _merge_state(state, cfg.walk_config(), merge_impl)
+    state = consolidate(state, cfg.walk_config(), merge_impl)
     return (graph_to_dict(state.graph), store_to_dict(state.store), affected)

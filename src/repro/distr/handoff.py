@@ -1,0 +1,67 @@
+"""Cross-shard walk-continuation handoff (DESIGN.md §4).
+
+A rewalk lane whose next vertex is owned by another shard must continue
+there. Inside the jitted scan every shard, every step:
+
+  1. routes each active lane by the vertex-range owner of its next vertex
+     (`shard_of_vertex`),
+  2. compacts the lanes into fixed-size per-destination slabs
+     (`core.corpus.compact_lanes_by_shard` — pure bucketing, op count
+     independent of the shard count),
+  3. exchanges the slabs with ONE `lax.all_to_all` over the 'shard' mesh
+     axis (lanes that stay local ride their own shard's slab row — the
+     self-exchange is a local copy),
+  4. scatters the received (lane id, vertex) pairs back into the full
+     [capacity] lane vector and continues locally.
+
+No host round-trip, no whole-array all-gather: the wire cost per step is
+`n_shards * slab * 8` bytes per shard, independent of graph or corpus size.
+Slab overflow (one destination receiving more than `slab` lanes in one
+step) is a sticky correctness flag, same deferred-overflow contract as the
+MAV gather capacity.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.corpus import compact_lanes_by_shard
+
+U32 = jnp.uint32
+I32 = jnp.int32
+
+
+def shard_of_vertex(v, vps: int):
+    """Vertex-range owner: shard k owns [k*vps, (k+1)*vps)."""
+    return (jnp.asarray(v, U32) // jnp.asarray(vps, U32)).astype(I32)
+
+
+def exchange_frontier(dest, nxt, n_shards: int, slab: int, axis: str):
+    """Route active lanes to their owner shards; return the received lanes.
+
+    dest: int32[capacity] destination shard per lane (`n_shards` = lane not
+    continuing). nxt: uint32[capacity] the lane's next vertex. Returns
+    (cur uint32[capacity], mine bool[capacity], overflow bool[]): the
+    post-exchange lane vector — `mine[i]` iff lane i now continues on THIS
+    shard, with `cur[i]` its (locally owned) current vertex.
+
+    Every active lane is re-routed every step (including to its own shard),
+    so the scatter rebuilds the full lane state from scratch: lanes active
+    elsewhere simply aren't received here.
+    """
+    capacity = dest.shape[0]
+    send_lane, overflow = compact_lanes_by_shard(dest, n_shards, slab)
+    gid = send_lane.reshape(-1)
+    payload = nxt[jnp.clip(gid, 0, capacity - 1)].astype(U32)
+    # pack (lane id, vertex) into one u32[..., 2] slab tensor: one collective
+    packed = jnp.stack([gid.astype(U32), payload], axis=-1)
+    packed = jnp.where((gid < capacity)[:, None], packed,
+                       jnp.asarray(capacity, U32))
+    packed = packed.reshape(n_shards, slab, 2)
+    recv = jax.lax.all_to_all(packed, axis, split_axis=0, concat_axis=0,
+                              tiled=True)
+    rgid = recv[..., 0].reshape(-1).astype(I32)   # sentinel = capacity
+    rcur = recv[..., 1].reshape(-1)
+    cur = jnp.zeros((capacity,), U32).at[rgid].set(rcur, mode="drop")
+    mine = jnp.zeros((capacity,), bool).at[rgid].set(True, mode="drop")
+    return cur, mine, overflow

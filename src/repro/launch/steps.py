@@ -499,7 +499,12 @@ def _wharf_plan(arch, cfg, info, mesh, shape_name) -> CellPlan:
     kind="walk_update": one batch per call (eager/no-merge forms).
     kind="walk_stream": the scan-pipelined driver — a whole
     [n_batches, batch] stream per call via the shared `stream_step`
-    (DESIGN.md §5), with in-scan policy merges."""
+    (DESIGN.md §5), with in-scan policy merges; `del_edges` adds a stacked
+    deletion stream alongside the insertions.
+    kind="walk_stream_sharded": the explicitly partitioned engine
+    (distr/sharded.py) — the production mesh re-viewed as a flat 1-D
+    'shard' axis, vertex-range-partitioned state under shard_map with
+    hand-written pmin + all_to_all collectives."""
     from repro.distr.engine import (distributed_run_stream,
                                     distributed_update_step,
                                     stream_shardings, wharf_shardings)
@@ -550,21 +555,83 @@ def _wharf_plan(arch, cfg, info, mesh, shape_name) -> CellPlan:
                    + (t + cfg.rewalk_capacity * cfg.length)
                    * math.log2(max(t, 2)) * 2)
 
+    if info["kind"] == "walk_stream_sharded":
+        from jax.sharding import Mesh
+
+        from repro.core.graph import StreamingGraph
+        from repro.core.store import WalkStore
+        from repro.core.update import EngineState, PendingBlocks
+        from repro.distr.sharded import make_sharded_stream_fn
+
+        n_batches = info.get("n_batches", cfg.stream_batches)
+        merge_policy = info.get("merge_policy", "on-demand")
+        del_e = info.get("del_edges", 0)
+        # one flat 'shard' axis over every production-mesh device: the
+        # vertex-range partition doesn't distinguish pod/data/model
+        shard_mesh = Mesh(mesh.devices.reshape(-1), ("shard",))
+        sn = int(shard_mesh.devices.size)
+        spec = cfg.shard_spec(sn)
+        fn = make_sharded_stream_fn(shard_mesh, wcfg, spec,
+                                    cfg.rewalk_capacity, cfg.max_pending,
+                                    merge_policy)
+        nv = cfg.n_vertices
+        es, ts = spec.edge_capacity, spec.store_capacity
+        nc_s = -(-ts // CHUNK)
+        ent = cfg.rewalk_capacity * cfg.length
+        state = EngineState(
+            graph=StreamingGraph(codes=S((sn, es), U64),
+                                 offsets=S((sn, nv + 1), I32),
+                                 num_edges=S((sn,), I32), n_vertices=nv),
+            store=WalkStore(
+                owner=S((sn, ts), U32), code=S((sn, ts), U64),
+                epoch=S((sn, ts), U32), offsets=S((sn, nv + 1), I32),
+                vmin=S((sn, nv), U32), vmax=S((sn, nv), U32),
+                packed=S((sn, nc_s, WORDS), U32),
+                widths=S((sn, nc_s), U32),
+                anchors_hi=S((sn, nc_s), U32),
+                anchors_lo=S((sn, nc_s), U32),
+                last_hi=S((sn, nc_s), U32), last_lo=S((sn, nc_s), U32),
+                slot_epoch=S((sn, t), U32), length=cfg.length,
+                n_walks=nv * cfg.n_walks_per_vertex, n_vertices=nv,
+                chunk_b=cfg.chunk_b),
+            pending=PendingBlocks(
+                owner=S((sn, cfg.max_pending, ent), U32),
+                code=S((sn, cfg.max_pending, ent), U64),
+                epoch=S((sn, cfg.max_pending, ent), U32),
+                slot=S((sn, cfg.max_pending, ent), I32)),
+            n_pending=S((sn,), I32), epoch=S((sn,), U32),
+            last_affected=S((sn,), I32), total_affected=S((sn,), I32),
+            overflow=S((sn,), jnp.bool_))
+        args = (state, S((n_batches, 2), jnp.uint32),
+                S((n_batches, batch_e), U32), S((n_batches, batch_e), U32),
+                S((n_batches, del_e), U32), S((n_batches, del_e), U32))
+        part = NamedSharding(shard_mesh, P("shard"))
+        repl = NamedSharding(shard_mesh, P())
+        in_sh = (part, repl, repl, repl, repl, repl)
+        out_sh = (part, part)
+        return CellPlan(arch, shape_name, "walk_stream_sharded_step", fn,
+                        args, in_sh, out_sh, flops_batch * n_batches,
+                        donate_argnums=(0,))
+
     if info["kind"] == "walk_stream":
         n_batches = info.get("n_batches", cfg.stream_batches)
         merge_policy = info.get("merge_policy", "on-demand")
+        del_e = info.get("del_edges", 0)
 
-        def stream(graph_d, store_d, keys, ins_src, ins_dst):
+        def stream(graph_d, store_d, keys, ins_src, ins_dst, del_src,
+                   del_dst):
             return distributed_run_stream(
                 graph_d, store_d, keys, ins_src, ins_dst, cfg,
                 merge_impl=merge_impl, merge_policy=merge_policy,
-                max_pending=cfg.max_pending)
+                max_pending=cfg.max_pending, del_src=del_src,
+                del_dst=del_dst)
 
         args = (graph, store, S((n_batches, 2), jnp.uint32),
-                S((n_batches, batch_e), U32), S((n_batches, batch_e), U32))
+                S((n_batches, batch_e), U32), S((n_batches, batch_e), U32),
+                S((n_batches, del_e), U32), S((n_batches, del_e), U32))
         st_sh = stream_shardings(mesh)
         in_sh = (g_sh, s_sh, st_sh["keys"], st_sh["ins_src"],
-                 st_sh["ins_dst"])
+                 st_sh["ins_dst"], st_sh["del_src"], st_sh["del_dst"])
         out_sh = (g_sh, s_sh, NamedSharding(mesh, P()))
         return CellPlan(arch, shape_name, "walk_stream_step", stream, args,
                         in_sh, out_sh, flops_batch * n_batches,
