@@ -153,6 +153,76 @@ def _bench_workload(wname: str, spec: dict, seed: int = 17,
     return out
 
 
+def observability_overhead(seed: int = 17, repeats: int = 3):
+    """BENCH_THROUGHPUT.json "observability" cell: the honest cost of
+    metrics ON (DESIGN.md §10).
+
+    Runs the dispatch-bound pipelined workload twice — metrics OFF (the
+    compiled-out default; HLO-identical to pre-observability, tested) and
+    metrics ON (StreamMetrics on the scan carry) — on identical streams,
+    and records the throughput ratio plus the ON run's exported counters
+    via `record_counters`. Also exercises the trace span log: the timed
+    sections land in bench_trace.jsonl next to the BENCH json (the CI
+    artifact)."""
+    from repro.obs import trace
+    from repro.obs.export import summary
+
+    spec = WORKLOADS["dispatch-bound"]
+    bg, cfg = spec["bg"], spec["cfg"]
+    n_batches, batch_edges = spec["n_batches"], spec["batch_edges"]
+    if common.SMOKE:
+        n_batches = min(n_batches, 8)
+        repeats = 1
+    key = jax.random.PRNGKey(seed)
+    src, dst = edge_batch_stream(key, n_batches, batch_edges, bg.log2_n,
+                                 bg.a, bg.b, bg.c, bg.d)
+
+    trace_path = common._bench_path("bench_trace.jsonl")
+    if os.path.exists(trace_path):
+        os.remove(trace_path)
+    trace.install(trace_path)
+
+    def mk(metrics: bool):
+        return _stream_engine(bg, cfg._replace(metrics=metrics), "on-demand",
+                              seed, edge_capacity=spec["edge_capacity"])
+
+    times = {}
+    eng_on = None
+    for label, metrics in (("metrics_off", False), ("metrics_on", True)):
+        _time_pipelined(mk(metrics), key, src, dst)  # compile warmup
+        best, eng = None, None
+        for _ in range(repeats):
+            e = mk(metrics)
+            with trace.phase(f"bench/{label}", cat="bench",
+                             n_batches=n_batches):
+                t = _time_pipelined(e, key, src, dst)
+            if best is None or t < best:
+                best, eng = t, e
+        times[label] = best
+        if metrics:
+            eng_on = eng
+    trace.uninstall()
+
+    overhead = times["metrics_on"] / times["metrics_off"] - 1.0
+    counters = summary(eng_on.metrics)
+    common.record_counters("observability", counters)
+    cell = {
+        "workload": "dispatch-bound", "n_batches": n_batches,
+        "metrics_off_s": round(times["metrics_off"], 5),
+        "metrics_on_s": round(times["metrics_on"], 5),
+        "on_overhead_frac": round(overhead, 4),
+        "trace_jsonl": os.path.basename(trace_path),
+        "note": "metrics OFF is compiled out (HLO-identical, "
+                "tests/test_obs.py); ON carries StreamMetrics on the scan "
+                "carry — engine outputs bit-identical",
+    }
+    emit("observability/metrics_off", 1e6 * times["metrics_off"] / n_batches)
+    emit("observability/metrics_on", 1e6 * times["metrics_on"] / n_batches,
+         f"overhead={100 * overhead:.1f}%")
+    merge_json("BENCH_THROUGHPUT.json", {"observability": cell})
+    return cell
+
+
 def pipelined_vs_per_batch(seed: int = 17):
     """Record BENCH_THROUGHPUT.json: scan-pipelined vs per-batch driver,
     both merge policies, identical streams (same keys -> bit-identical
@@ -178,8 +248,10 @@ def pipelined_vs_per_batch(seed: int = 17):
 
 def run(batch_edges: int = 500):
     if common.SMOKE:
-        # CI smoke: just the pipelined-vs-per-batch driver comparison
+        # CI smoke: the pipelined-vs-per-batch driver comparison + the
+        # metrics-overhead cell (the observability smoke step)
         pipelined_vs_per_batch()
+        observability_overhead()
         return
     for gname, bg in GRAPHS.items():
         _, engines = build_engines(bg, DEFAULT_CFG)
@@ -195,6 +267,7 @@ def run(batch_edges: int = 500):
                                           deletions=True)
         emit(f"fig7_mixed_ID/{ename}", lat, f"walks_per_s={wps:.0f}")
     pipelined_vs_per_batch()
+    observability_overhead()
 
 
 if __name__ == "__main__":

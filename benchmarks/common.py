@@ -26,6 +26,12 @@ ROWS: List[str] = []
 # their workloads so the whole module finishes in seconds
 SMOKE = False
 
+# observability sidecar (repro/obs, DESIGN.md §10): benches deposit counter
+# summaries here via record_counters(); write_json/merge_json fold the
+# accumulated dict into every BENCH_*.json payload under "counters", so each
+# timing cell carries the stream telemetry it was measured with
+COUNTERS: dict = {}
+
 _REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
@@ -33,6 +39,14 @@ def emit(name: str, us_per_call: float, derived: str = ""):
     row = f"{name},{us_per_call:.1f},{derived}"
     ROWS.append(row)
     print(row, flush=True)
+
+
+def record_counters(cell: str, metrics, serve: dict = None):
+    """Attach a finished StreamMetrics (or a prebuilt summary dict) to the
+    next BENCH_*.json write as `counters[cell]`."""
+    from repro.obs.export import summary
+    COUNTERS[cell] = metrics if isinstance(metrics, dict) \
+        else summary(metrics, serve=serve)
 
 
 def _bench_path(filename: str) -> str:
@@ -48,7 +62,13 @@ def _bench_path(filename: str) -> str:
 
 def write_json(filename: str, payload: dict):
     """Record a benchmark's structured results as BENCH_*.json at repo root
-    (smoke-aware, see _bench_path)."""
+    (smoke-aware, see _bench_path). Counter summaries deposited via
+    `record_counters` since the last write ride along under "counters"."""
+    if COUNTERS:
+        merged = dict(payload.get("counters", {}))
+        merged.update(COUNTERS)
+        payload = dict(payload, counters=merged)
+        COUNTERS.clear()
     path = _bench_path(filename)
     with open(path, "w") as f:
         json.dump(payload, f, indent=2, sort_keys=True)

@@ -31,7 +31,10 @@ MODULES = [
 ]
 
 
-SMOKE_MODULES = ["bench_memory", "bench_search", "bench_walk"]
+# bench_throughput in smoke mode runs the pipelined-driver comparison plus
+# the metrics-overhead "observability" cell (the CI observability smoke)
+SMOKE_MODULES = ["bench_memory", "bench_search", "bench_walk",
+                 "bench_throughput"]
 
 
 def main() -> None:

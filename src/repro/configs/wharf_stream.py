@@ -57,6 +57,10 @@ class WharfStreamConfig:
     # "interpret" / "pallas-interpret" / "xla-ref" to enable, "off" to pin
     # the unfused path regardless of the registry.
     megakernel: str = "auto"
+    # device-side stream telemetry (repro/obs, DESIGN.md §10): OFF keeps the
+    # engine HLO untouched; ON carries a StreamMetrics pytree through the
+    # stream scans (engine outputs stay bit-identical)
+    metrics: bool = False
 
     def walk_config(self) -> WalkConfig:
         return WalkConfig(n_walks_per_vertex=self.n_walks_per_vertex,
@@ -65,7 +69,8 @@ class WharfStreamConfig:
                                           sampler=self.sampler,
                                           dmax=self.sampler_dmax),
                           chunk_b=self.chunk_b,
-                          megakernel=self.megakernel)
+                          megakernel=self.megakernel,
+                          metrics=self.metrics)
 
     def shard_spec(self, n_shards: int = 0):
         """The explicit-partition ShardSpec this config describes

@@ -32,6 +32,12 @@ class WalkConfig(NamedTuple):
     # path), or an explicit "off" / megakernel backend name. Static jit
     # argument of core.update._rewalk, so changing it retraces naturally.
     megakernel: str = "auto"
+    # carry a repro.obs.metrics.StreamMetrics pytree through the stream
+    # scans (DESIGN.md §10). Static jit argument: OFF (the default) traces
+    # the exact pre-observability HLO — the metrics code is never even
+    # called — and ON only READS the engine carry, so engine outputs stay
+    # bit-identical (tests/test_obs.py).
+    metrics: bool = False
 
 
 def walk_start_vertex(w, n_w: int):

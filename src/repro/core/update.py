@@ -166,6 +166,13 @@ class WalkEngine:
                                         pending=pending, n_pending=n_pending)
         self._n_pending_host = int(n_pending)
         self._epoch_host = 0
+        # cfg.metrics: StreamMetrics accumulated across run_stream calls
+        # (device-resident; export via repro.obs.export.summary)
+        if cfg is not None and cfg.metrics:
+            from repro.obs.metrics import StreamMetrics
+            self.metrics = StreamMetrics.empty()
+        else:
+            self.metrics = None
 
     # ----------------------------------------------------- state projections
 
@@ -269,6 +276,10 @@ class WalkEngine:
         stacked `UpdateAux` ([n_batches, capacity] leaves): each step's
         affected-walk ids / lane validity / p_min — the per-step masks the
         downstream embedding maintainer consumes.
+
+        With `cfg.metrics`, `self.metrics` (a StreamMetrics pytree, also
+        donated) accumulates the stream's counters on device — the return
+        value is unchanged; read `engine.metrics` at stream end.
         """
         ins_src = jnp.asarray(ins_src, U32)
         ins_dst = jnp.asarray(ins_dst, U32)
@@ -281,12 +292,22 @@ class WalkEngine:
             del_dst = jnp.asarray(del_dst, U32)
         keys = jax.random.split(key, n_batches)
 
-        self.state, out = _run_stream_jit(
-            self.state, keys, ins_src, ins_dst, del_src, del_dst,
-            cfg=self.cfg, capacity=self.rewalk_capacity,
-            mav_capacity=self._mav_capacity(), max_pending=self.max_pending,
-            merge_policy=self.merge_policy, merge_impl=self.merge_impl,
-            with_masks=return_masks)
+        if self.cfg.metrics:
+            self.state, self.metrics, out = _run_stream_obs_jit(
+                self.state, self.metrics, keys, ins_src, ins_dst, del_src,
+                del_dst, cfg=self.cfg, capacity=self.rewalk_capacity,
+                mav_capacity=self._mav_capacity(),
+                max_pending=self.max_pending,
+                merge_policy=self.merge_policy, merge_impl=self.merge_impl,
+                with_masks=return_masks)
+        else:
+            self.state, out = _run_stream_jit(
+                self.state, keys, ins_src, ins_dst, del_src, del_dst,
+                cfg=self.cfg, capacity=self.rewalk_capacity,
+                mav_capacity=self._mav_capacity(),
+                max_pending=self.max_pending,
+                merge_policy=self.merge_policy, merge_impl=self.merge_impl,
+                with_masks=return_masks)
 
         # host mirrors: the merge schedule is data-independent
         self._n_pending_host = pending_after_stream(
@@ -445,7 +466,8 @@ def consolidate(state: EngineState, cfg: WalkConfig,
 def run_stream(state: EngineState, keys, ins_src, ins_dst, del_src, del_dst,
                *, cfg: WalkConfig, capacity: int, mav_capacity: int,
                max_pending: int, merge_policy: str = "on-demand",
-               merge_impl: str = "interleave", with_masks: bool = False):
+               merge_impl: str = "interleave", with_masks: bool = False,
+               metrics=None):
     """PUBLIC scan-pipelined driver: a whole [n_batches, batch] mixed
     insert+delete stream through `stream_step`, one jitted `lax.scan`.
 
@@ -456,7 +478,22 @@ def run_stream(state: EngineState, keys, ins_src, ins_dst, del_src, del_dst,
     `(state, (affected, UpdateAux))` with `with_masks=True`. Deletion
     streams may be zero-width ([n_batches, 0]). The input `state` is DONATED
     (in-place buffer reuse across the stream): prior references to its
-    buffers are invalidated."""
+    buffers are invalidated.
+
+    With `cfg.metrics` set, a `StreamMetrics` pytree rides the carry
+    (donated too; pass `metrics` to continue accumulating a prior stream's
+    counters, default fresh) and the return gains a trailing element:
+    `(state, affected[, aux], metrics)`."""
+    if cfg.metrics:
+        if metrics is None:
+            from repro.obs.metrics import StreamMetrics
+            metrics = StreamMetrics.empty()
+        state, metrics, out = _run_stream_obs_jit(
+            state, metrics, keys, ins_src, ins_dst, del_src, del_dst,
+            cfg=cfg, capacity=capacity, mav_capacity=mav_capacity,
+            max_pending=max_pending, merge_policy=merge_policy,
+            merge_impl=merge_impl, with_masks=with_masks)
+        return state, out, metrics
     return _run_stream_jit(state, keys, ins_src, ins_dst, del_src, del_dst,
                            cfg=cfg, capacity=capacity,
                            mav_capacity=mav_capacity,
@@ -484,7 +521,7 @@ def pending_after_stream(n_pending: int, n_batches: int, max_pending: int,
 def stream_step_aux(state: EngineState, key, ins_src, ins_dst, del_src,
                     del_dst, cfg: WalkConfig, capacity: int,
                     mav_capacity: int, max_pending: int, merge_policy: str,
-                    merge_impl: str):
+                    merge_impl: str, metrics=None):
     """One streaming-pipeline step (pure): policy merges + Algorithm 2.
 
     Returns (EngineState, UpdateAux). The aux identifies THIS step's
@@ -492,14 +529,31 @@ def stream_step_aux(state: EngineState, key, ins_src, ins_dst, del_src,
     incremental SGNS retraining on (downstream/maintainer.py). Note the aux
     is valid against the post-step state regardless of policy: an eager
     merge folds the pending block into the base, but the affected walk ids
-    and p_min are store-layout-independent."""
+    and p_min are store-layout-independent.
+
+    With a `repro.obs.metrics.StreamMetrics` passed as `metrics` the step
+    additionally folds this update into the counters and returns
+    (state, aux, metrics). The metrics path only READS the engine carry
+    (between the Algorithm-2 apply and any eager merge, while the fresh
+    version block is still pending) — engine outputs are bit-identical and
+    the default `metrics=None` path traces the exact same HLO as before
+    (tests/test_obs.py)."""
     merge = partial(_merge_state, cfg=cfg, merge_impl=merge_impl)
-    state = jax.lax.cond(state.n_pending >= jnp.asarray(max_pending, I32),
-                         merge, lambda s: s, state)
+    forced = state.n_pending >= jnp.asarray(max_pending, I32)
+    overflow_before = state.overflow
+    state = jax.lax.cond(forced, merge, lambda s: s, state)
     state, aux = _apply_update(state, ins_src, ins_dst, del_src, del_dst,
                                key, cfg, capacity, mav_capacity)
+    if metrics is not None:
+        from repro.obs.metrics import record_engine_step
+        metrics = record_engine_step(metrics, state, aux,
+                                     state.n_pending - 1, forced,
+                                     overflow_before, cfg,
+                                     eager=merge_policy == "eager")
     if merge_policy == "eager":
         state = merge(state)
+    if metrics is not None:
+        return state, aux, metrics
     return state, aux
 
 
@@ -560,6 +614,36 @@ def _run_stream_jit(state: EngineState, keys, ins_src, ins_dst, del_src,
 
     return jax.lax.scan(body, state, (keys, ins_src, ins_dst, del_src,
                                       del_dst))
+
+
+@partial(jax.jit,
+         static_argnames=("cfg", "capacity", "mav_capacity", "max_pending",
+                          "merge_policy", "merge_impl", "with_masks"),
+         donate_argnums=(0, 1))
+def _run_stream_obs_jit(state: EngineState, metrics, keys, ins_src, ins_dst,
+                        del_src, del_dst, cfg: WalkConfig, capacity: int,
+                        mav_capacity: int, max_pending: int,
+                        merge_policy: str, merge_impl: str,
+                        with_masks: bool = False):
+    """`_run_stream_jit` with a StreamMetrics pytree riding the scan carry.
+
+    A SEPARATE jit entry (not a flag on `_run_stream_jit`) so the OFF path
+    keeps its exact pre-observability trace; the metrics pytree is donated
+    alongside the engine carry and accumulates on device — observing a
+    stream adds zero host round-trips (DESIGN.md §10)."""
+
+    def body(carry, xs):
+        s, m = carry
+        k, i_s, i_d, d_s, d_d = xs
+        s, aux, m = stream_step_aux(s, k, i_s, i_d, d_s, d_d, cfg, capacity,
+                                    mav_capacity, max_pending, merge_policy,
+                                    merge_impl, metrics=m)
+        out = (s.last_affected, aux) if with_masks else s.last_affected
+        return (s, m), out
+
+    (state, metrics), out = jax.lax.scan(
+        body, (state, metrics), (keys, ins_src, ins_dst, del_src, del_dst))
+    return state, metrics, out
 
 
 class VersionBlock(NamedTuple):

@@ -208,7 +208,7 @@ def _local_merge_state(state: EngineState) -> EngineState:
 
 def _sharded_rewalk(key, graph: StreamingGraph, store: WalkStore, mav,
                     new_epoch, cfg: WalkConfig, capacity: int,
-                    spec: ShardSpec, my_shard):
+                    spec: ShardSpec, my_shard, with_obs: bool = False):
     """The single-host `_rewalk` scan with lane residency + handoff.
 
     The lane METADATA (affected walk ids, p_min, spawn vertex) is replicated
@@ -217,7 +217,11 @@ def _sharded_rewalk(key, graph: StreamingGraph, store: WalkStore, mav,
     vertex, emits its triplet locally (owner = current vertex is owned here
     by construction), and is re-routed through `exchange_frontier` every
     step. Draws are replicated full-lane-shape (see module docstring), so
-    the emitted triplets are bit-identical to the single-host scan."""
+    the emitted triplets are bit-identical to the single-host scan.
+
+    `with_obs` (static) additionally rides this shard's handoff counters on
+    the scan carry (DESIGN.md §10) and appends an obs dict to the return —
+    pure reads of `dest`, so the frontier itself is untouched."""
     length = store.length
     affected = mav.p_min < length
     walk_ids, lane_valid = compact_nonzero(affected, size=capacity)
@@ -231,7 +235,10 @@ def _sharded_rewalk(key, graph: StreamingGraph, store: WalkStore, mav,
     l64 = jnp.asarray(length, U64)
 
     def step(carry, inp):
-        cur, mine, ovf = carry
+        if with_obs:
+            cur, mine, ovf, h_sent, h_cross, h_max = carry
+        else:
+            cur, mine, ovf = carry
         p, kp = inp
         spawn = p == p_min
         cur = jnp.where(spawn, v_at_pmin, cur)
@@ -247,15 +254,36 @@ def _sharded_rewalk(key, graph: StreamingGraph, store: WalkStore, mav,
         cont = mine & ~is_term
         dest = jnp.where(cont, shard_of_vertex(nxt, spec.vps),
                          spec.n_shards)
+        if with_obs:
+            with jax.named_scope("obs_metrics"):
+                load = (jnp.zeros((spec.n_shards + 1,), I32)
+                        .at[dest].add(1))[:spec.n_shards]
+                h_sent = h_sent + jnp.sum(load).astype(I32)
+                h_cross = h_cross + jnp.sum(
+                    cont & (dest != my_shard)).astype(I32)
+                h_max = jnp.maximum(h_max, jnp.max(load)).astype(I32)
         cur2, mine2, of = exchange_frontier(dest, nxt, spec.n_shards,
                                             spec.slab, AXIS)
+        if with_obs:
+            return ((cur2, mine2, ovf | of, h_sent, h_cross, h_max),
+                    (owner, code, emit))
         return (cur2, mine2, ovf | of), (owner, code, emit)
 
     keys = jax.random.split(key, length)
     init = (jnp.zeros((capacity,), U32), jnp.zeros((capacity,), bool),
             jnp.asarray(False))
-    (_, _, handoff_ovf), (owners, codes, emits) = jax.lax.scan(
-        step, init, (ps, keys))
+    if with_obs:
+        z = lambda: jnp.zeros((), I32)
+        init = init + (z(), z(), z())
+        carry_out, (owners, codes, emits) = jax.lax.scan(
+            step, init, (ps, keys))
+        handoff_ovf = carry_out[2]
+        obs = {"handoff_sent": carry_out[3], "handoff_cross": carry_out[4],
+               "handoff_max_load": carry_out[5],
+               "pmin_hist": _obs_pmin_hist(p_min, lane_valid, length)}
+    else:
+        (_, _, handoff_ovf), (owners, codes, emits) = jax.lax.scan(
+            step, init, (ps, keys))
     owners = owners.T.reshape(-1)       # [capacity * l], lane-major
     codes = codes.T.reshape(-1)
     emits = emits.T.reshape(-1)
@@ -280,15 +308,28 @@ def _sharded_rewalk(key, graph: StreamingGraph, store: WalkStore, mav,
     block = VersionBlock(owner=owners, code=codes, epoch=epoch,
                          slot=jnp.where(emits, slots, 0).astype(I32),
                          n_new=jnp.sum(emits).astype(I32))
+    if with_obs:
+        return block, slot_epoch, n_aff, handoff_ovf, obs
     return block, slot_epoch, n_aff, handoff_ovf
+
+
+def _obs_pmin_hist(p_min, lane_valid, length: int):
+    from repro.obs.metrics import pmin_bucket_counts
+    with jax.named_scope("obs_metrics"):
+        return pmin_bucket_counts(p_min, lane_valid, length)
 
 
 def _sharded_apply_update(state: EngineState, ins_src, ins_dst, del_src,
                           del_dst, key, cfg: WalkConfig, capacity: int,
-                          spec: ShardSpec, my_shard) -> EngineState:
+                          spec: ShardSpec, my_shard, with_obs: bool = False):
     """Shard-local Algorithm 2: the `_apply_update` dataflow with the
     frontier gather factored into (local gather) + (pmin combine), and the
-    rewalk replaced by the handoff scan."""
+    rewalk replaced by the handoff scan.
+
+    `with_obs` (static) returns (state, obs): the rewalk's handoff counters
+    and pmin histogram plus this step's PER-SOURCE overflow flags (graph /
+    MAV gather / handoff slab) — the provenance `record_sharded_step`
+    stamps; the engine's own `overflow` stays the single OR as before."""
     graph, g_ovf = _local_apply_batch(state.graph, ins_src, ins_dst,
                                       del_src, del_dst, spec, my_shard)
     store, pending = state.store, state.pending
@@ -327,8 +368,14 @@ def _sharded_apply_update(state: EngineState, ins_src, ins_dst, del_src,
         store.length, store.n_walks)
     mav = mav_from_keyed(jax.lax.pmin(best, AXIS), store.length)
 
-    block, slot_epoch, n_aff, h_ovf = _sharded_rewalk(
-        key, graph, store, mav, new_epoch, cfg, capacity, spec, my_shard)
+    rw = _sharded_rewalk(key, graph, store, mav, new_epoch, cfg, capacity,
+                         spec, my_shard, with_obs=with_obs)
+    if with_obs:
+        block, slot_epoch, n_aff, h_ovf, obs = rw
+        obs = dict(obs, graph_overflow=g_ovf, mav_overflow=mav_ovf,
+                   handoff_overflow=h_ovf)
+    else:
+        block, slot_epoch, n_aff, h_ovf = rw
     pending = PendingBlocks(
         owner=jax.lax.dynamic_update_index_in_dim(
             pending.owner, block.owner, state.n_pending, 0),
@@ -339,11 +386,14 @@ def _sharded_apply_update(state: EngineState, ins_src, ins_dst, del_src,
         slot=jax.lax.dynamic_update_index_in_dim(
             pending.slot, block.slot, state.n_pending, 0))
     n_aff = n_aff.astype(I32)
-    return EngineState(
+    state = EngineState(
         graph=graph, store=store.replace(slot_epoch=slot_epoch),
         pending=pending, n_pending=state.n_pending + 1, epoch=new_epoch,
         last_affected=n_aff, total_affected=state.total_affected + n_aff,
         overflow=state.overflow | g_ovf | mav_ovf | h_ovf)
+    if with_obs:
+        return state, obs
+    return state
 
 
 def sharded_stream_step(state: EngineState, key, ins_src, ins_dst, del_src,
@@ -360,6 +410,33 @@ def sharded_stream_step(state: EngineState, key, ins_src, ins_dst, del_src,
     if merge_policy == "eager":
         state = _local_merge_state(state)
     return state
+
+
+def sharded_stream_step_obs(state: EngineState, metrics, key, ins_src,
+                            ins_dst, del_src, del_dst, cfg: WalkConfig,
+                            capacity: int, spec: ShardSpec, my_shard,
+                            max_pending: int, merge_policy: str):
+    """`sharded_stream_step` + this shard's StreamMetrics fold.
+
+    A separate function (not a flag on the OFF step) so the untracked
+    driver keeps its exact pre-observability trace. Engine dataflow is
+    identical; store-merge overflow provenance is recovered from the sticky
+    flag's before/after diff around each in-scan consolidate."""
+    from repro.obs.metrics import record_sharded_step
+    forced = state.n_pending >= jnp.asarray(max_pending, I32)
+    ovf0 = state.overflow
+    state = jax.lax.cond(forced, _local_merge_state, lambda s: s, state)
+    merge_tripped = state.overflow & ~ovf0
+    state, obs = _sharded_apply_update(state, ins_src, ins_dst, del_src,
+                                       del_dst, key, cfg, capacity, spec,
+                                       my_shard, with_obs=True)
+    if merge_policy == "eager":
+        ovf1 = state.overflow
+        state = _local_merge_state(state)
+        merge_tripped = merge_tripped | (state.overflow & ~ovf1)
+    metrics = record_sharded_step(metrics, state, obs, forced, merge_tripped,
+                                  eager=merge_policy == "eager")
+    return state, metrics
 
 
 # ------------------------------------------------------------------- driver
@@ -406,6 +483,59 @@ def _make_sharded_run(mesh, cfg: WalkConfig, spec: ShardSpec, capacity: int,
                    donate_argnums=(0,))
 
 
+def make_sharded_stream_obs_fn(mesh, cfg: WalkConfig, spec: ShardSpec,
+                               capacity: int, max_pending: int,
+                               merge_policy: str):
+    """`make_sharded_stream_fn` with per-shard StreamMetrics on the carry.
+
+    The metrics pytree enters/leaves [S, ...]-stacked with P(AXIS) specs
+    like the engine state; each shard accumulates its own counters inside
+    the scan (replicated ones land identical everywhere — asserted by
+    tests), reduce at the end with `obs.metrics.combine_shards`."""
+    from repro.obs.metrics import OVF_STORE, record_overflow
+
+    def run(stacked, stacked_m, keys, ins_src, ins_dst, del_src, del_dst):
+        state = jax.tree.map(lambda leaf: leaf[0], stacked)
+        metrics = jax.tree.map(lambda leaf: leaf[0], stacked_m)
+        my_shard = jax.lax.axis_index(AXIS)
+
+        def body(carry, xs):
+            s, m = carry
+            k, i_s, i_d, d_s, d_d = xs
+            s, m = sharded_stream_step_obs(s, m, k, i_s, i_d, d_s, d_d, cfg,
+                                           capacity, spec, my_shard,
+                                           max_pending, merge_policy)
+            return (s, m), s.last_affected
+
+        (state, metrics), affected = jax.lax.scan(
+            body, (state, metrics), (keys, ins_src, ins_dst, del_src,
+                                     del_dst))
+        # end-of-stream consolidate can trip the store capacity too —
+        # stamp its provenance before the flag diff is lost
+        ovf0 = state.overflow
+        state = _local_merge_state(state)
+        metrics = record_overflow(metrics, OVF_STORE,
+                                  state.overflow & ~ovf0, state.epoch)
+        stacked = jax.tree.map(lambda leaf: leaf[None], state)
+        stacked_m = jax.tree.map(lambda leaf: leaf[None], metrics)
+        return stacked, stacked_m, affected[None]
+
+    return shard_map(
+        run, mesh=mesh,
+        in_specs=(P(AXIS), P(AXIS), P(), P(), P(), P(), P()),
+        out_specs=(P(AXIS), P(AXIS), P(AXIS)), check_rep=False)
+
+
+@lru_cache(maxsize=None)
+def _make_sharded_run_obs(mesh, cfg: WalkConfig, spec: ShardSpec,
+                          capacity: int, max_pending: int,
+                          merge_policy: str):
+    """Jitted observed driver; engine state AND metrics donated."""
+    return jax.jit(make_sharded_stream_obs_fn(mesh, cfg, spec, capacity,
+                                              max_pending, merge_policy),
+                   donate_argnums=(0, 1))
+
+
 def shard_mesh(n_shards: int) -> Mesh:
     """1-D 'shard' mesh over the first n_shards local devices."""
     devs = jax.devices()
@@ -418,14 +548,20 @@ def shard_mesh(n_shards: int) -> Mesh:
 def sharded_run_stream(stacked: EngineState, key, ins_src, ins_dst,
                        del_src=None, del_dst=None, *, cfg: WalkConfig,
                        spec: ShardSpec, capacity: int, max_pending: int = 8,
-                       merge_policy: str = "on-demand", mesh: Mesh = None):
+                       merge_policy: str = "on-demand", mesh: Mesh = None,
+                       metrics=None):
     """A whole [n_batches, batch] mixed stream on the explicit shard mesh.
 
     The partitioned twin of `WalkEngine.run_stream`: same per-batch key
     split, same merge cadence, bit-identical output triplets/graph/corpus
     (tests/test_distr.py). `stacked` is the [S, ...]-stacked per-shard
     EngineState from `shard_state` and is DONATED. Returns
-    (stacked_state, affected int32[n_batches])."""
+    (stacked_state, affected int32[n_batches]).
+
+    With `cfg.metrics` the return gains a trailing [S, ...]-stacked
+    per-shard StreamMetrics (donated; pass `metrics` to continue a prior
+    stream's counters) — reduce with `obs.metrics.combine_shards` /
+    `obs.export.summary`."""
     if cfg.model.order != 1:
         raise NotImplementedError(
             "sharded run_stream is order-1 (DeepWalk) only — order-2 "
@@ -441,6 +577,16 @@ def sharded_run_stream(stacked: EngineState, key, ins_src, ins_dst,
         del_dst = jnp.asarray(del_dst, U32)
     keys = jax.random.split(key, n_batches)
     mesh = mesh if mesh is not None else shard_mesh(spec.n_shards)
+    if cfg.metrics:
+        if metrics is None:
+            from repro.obs.metrics import StreamMetrics
+            empties = [StreamMetrics.empty() for _ in range(spec.n_shards)]
+            metrics = jax.tree.map(lambda *ls: jnp.stack(ls), *empties)
+        fn = _make_sharded_run_obs(mesh, cfg, spec, capacity, max_pending,
+                                   merge_policy)
+        stacked, metrics, affected = fn(stacked, metrics, keys, ins_src,
+                                        ins_dst, del_src, del_dst)
+        return stacked, affected[0], metrics
     fn = _make_sharded_run(mesh, cfg, spec, capacity, max_pending,
                            merge_policy)
     stacked, affected = fn(stacked, keys, ins_src, ins_dst, del_src,

@@ -147,19 +147,29 @@ def _lr_schedule(cfg: MaintainerConfig, step):
 
 def maintain_step(state: MaintainerState, key_update, key_train, ins_src,
                   ins_dst, del_src, del_dst, cfg: MaintainerConfig,
-                  mav_capacity: int):
+                  mav_capacity: int, obs=None):
     """One co-scheduled step (pure): stream_step + affected-only SGNS.
 
     The engine carry advances through the SAME `stream_step` the plain
     drivers run (bit-identical stores on the same update keys); the aux
     names this step's affected walks, whose windows are read mergelessly
     through the overlay (base + pending, slot-epoch precedence) so training
-    sees the post-update walk content without forcing a merge."""
+    sees the post-update walk content without forcing a merge.
+
+    With a StreamMetrics passed as `obs` the engine half of the step is
+    observed exactly like the plain drivers (cfg.walk.metrics path) and the
+    return gains a trailing element: (state, StepMetrics, obs)."""
     wcfg = cfg.walk
-    engine, aux = stream_step_aux(
-        state.engine, key_update, ins_src, ins_dst, del_src, del_dst,
-        wcfg, cfg.rewalk_capacity, mav_capacity, cfg.max_pending,
-        cfg.merge_policy, cfg.merge_impl)
+    if obs is not None:
+        engine, aux, obs = stream_step_aux(
+            state.engine, key_update, ins_src, ins_dst, del_src, del_dst,
+            wcfg, cfg.rewalk_capacity, mav_capacity, cfg.max_pending,
+            cfg.merge_policy, cfg.merge_impl, metrics=obs)
+    else:
+        engine, aux = stream_step_aux(
+            state.engine, key_update, ins_src, ins_dst, del_src, del_dst,
+            wcfg, cfg.rewalk_capacity, mav_capacity, cfg.max_pending,
+            cfg.merge_policy, cfg.merge_impl)
 
     # mergeless read of the affected walks' post-update windows
     ov = Overlay.build(engine.store, engine.pending)
@@ -205,7 +215,10 @@ def maintain_step(state: MaintainerState, key_update, key_train, ins_src,
            "pairs": state.opt["pairs"] + n_pairs.astype(I64)}
     metrics = StepMetrics(loss_sum=loss_sum, n_pairs=n_pairs.astype(I32),
                           n_affected=engine.last_affected)
-    return MaintainerState(engine=engine, params=params, opt=opt), metrics
+    out = MaintainerState(engine=engine, params=params, opt=opt)
+    if obs is not None:
+        return out, metrics, obs
+    return out, metrics
 
 
 @partial(jax.jit, static_argnames=("cfg", "mav_capacity"),
@@ -238,6 +251,28 @@ def _maintain_stream_jit(state: MaintainerState, update_keys, train_keys,
                                       ins_dst, del_src, del_dst))
 
 
+@partial(jax.jit, static_argnames=("cfg", "mav_capacity"),
+         donate_argnums=(0, 1))
+def _maintain_stream_obs_jit(state: MaintainerState, obs, update_keys,
+                             train_keys, ins_src, ins_dst, del_src, del_dst,
+                             cfg: MaintainerConfig, mav_capacity: int):
+    """`_maintain_stream_jit` with a StreamMetrics pytree on the carry
+    (separate jit entry so the OFF path keeps its pre-observability trace;
+    the metrics pytree is donated alongside the maintainer carry)."""
+
+    def body(carry, xs):
+        s, o = carry
+        ku, kt, i_s, i_d, d_s, d_d = xs
+        s, m, o = maintain_step(s, ku, kt, i_s, i_d, d_s, d_d, cfg,
+                                mav_capacity, obs=o)
+        return (s, o), m
+
+    (state, obs), metrics = jax.lax.scan(
+        body, (state, obs), (update_keys, train_keys, ins_src, ins_dst,
+                             del_src, del_dst))
+    return state, obs, metrics
+
+
 class EmbeddingMaintainer:
     """Stateful wrapper: a WalkEngine whose stream steps also train SGNS.
 
@@ -256,6 +291,13 @@ class EmbeddingMaintainer:
         self.state = init_maintainer(key, graph, store, cfg)
         self._n_pending_host = 0
         self._epoch_host = 0
+        # cfg.walk.metrics: engine-side StreamMetrics accumulated across
+        # run_stream calls, same contract as WalkEngine.metrics
+        if cfg.walk.metrics:
+            from repro.obs.metrics import StreamMetrics
+            self.metrics = StreamMetrics.empty()
+        else:
+            self.metrics = None
 
     # ----------------------------------------------------- state projections
 
@@ -354,9 +396,14 @@ class EmbeddingMaintainer:
             train_key = jax.random.fold_in(key, 0x5465)
         train_keys = jax.random.split(train_key, n_batches)
 
-        self.state, metrics = _maintain_stream_jit(
-            self.state, update_keys, train_keys, ins_src, ins_dst, del_src,
-            del_dst, self.cfg, self.cfg.mav_capacity)
+        if self.cfg.walk.metrics:
+            self.state, self.metrics, metrics = _maintain_stream_obs_jit(
+                self.state, self.metrics, update_keys, train_keys, ins_src,
+                ins_dst, del_src, del_dst, self.cfg, self.cfg.mav_capacity)
+        else:
+            self.state, metrics = _maintain_stream_jit(
+                self.state, update_keys, train_keys, ins_src, ins_dst,
+                del_src, del_dst, self.cfg, self.cfg.mav_capacity)
         self._advance_mirrors(n_batches)
         return metrics
 

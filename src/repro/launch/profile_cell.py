@@ -1,20 +1,27 @@
-import os
-os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
-                           " --xla_force_host_platform_device_count=512").strip()
-
 """Per-cell profile: lower+compile a cell and print the top-N ops by
 trip-scaled HBM bytes (the dry-run 'profile' for §Perf iterations).
 
   PYTHONPATH=src python -m repro.launch.profile_cell --arch qwen1.5-110b \
       --shape train_4k
-"""
-import argparse  # noqa: E402
-import logging  # noqa: E402
 
-import jax  # noqa: E402
+`--force-devices N` (default 512, 0 = leave XLA_FLAGS alone) injects
+`--xla_force_host_platform_device_count` BEFORE jax initializes — set from
+`main()` only, so merely importing this module never mutates the process
+environment (it used to, poisoning any importer's device topology).
 
-from repro.launch.hlo_analysis import analyze, breakdown  # noqa: E402
-from repro.launch.mesh import make_production_mesh  # noqa: E402
+This is the STATIC cost profile (compiled-HLO op table). For runtime phase
+timing of the live engine — findnext/sample/merge/collective spans on the
+profiler timeline plus a Chrome-trace JSONL — see repro/obs/trace.py
+(DESIGN.md §10)."""
+import argparse
+import logging
+import os
+
+
+def _force_host_devices(n: int) -> None:
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + f" --xla_force_host_platform_device_count={n}").strip()
 
 
 def main():
@@ -23,9 +30,18 @@ def main():
     ap.add_argument("--shape", required=True)
     ap.add_argument("--multi", action="store_true")
     ap.add_argument("--top", type=int, default=25)
+    ap.add_argument("--force-devices", type=int, default=512,
+                    help="forced host platform device count for the dry-run "
+                         "mesh (0 = don't touch XLA_FLAGS)")
     args = ap.parse_args()
     logging.disable(logging.WARNING)
+    if args.force_devices:
+        _force_host_devices(args.force_devices)
 
+    import jax
+
+    from repro.launch.hlo_analysis import analyze, breakdown
+    from repro.launch.mesh import make_production_mesh
     from repro.launch.steps import build_cell
 
     mesh = make_production_mesh(multi_pod=args.multi)

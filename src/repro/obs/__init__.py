@@ -1,0 +1,16 @@
+"""Device-resident stream telemetry (DESIGN.md §10).
+
+Three layers, strictly additive to the engine:
+
+  * obs/metrics.py — `StreamMetrics`, a registered-dataclass pytree of
+    device counters carried through the jitted stream scans (single-host
+    `run_stream`, sharded `sharded_run_stream`, the downstream maintainer)
+    with zero mid-stream host round-trips. OFF by default
+    (`WalkConfig.metrics`): the untracked drivers' HLO is unchanged.
+  * obs/trace.py — host-side phase spans (`jax.profiler.TraceAnnotation` +
+    `jax.named_scope`) and a Chrome-trace-compatible JSONL span log.
+  * obs/export.py — stable JSON summaries and Prometheus-style text from a
+    finished `StreamMetrics`.
+"""
+from repro.obs.metrics import (NEVER, OVERFLOW_SOURCES,  # noqa: F401
+                               PMIN_BUCKETS, StreamMetrics, combine_shards)

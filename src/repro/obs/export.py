@@ -1,0 +1,141 @@
+"""Render a finished `StreamMetrics` to stable JSON and Prometheus text.
+
+`summary()` is THE stable schema — benchmarks embed it in BENCH_*.json
+cells (benchmarks/common.py `record_counters`) and tests replay against it,
+so keys are append-only: add new counters under new keys, never rename.
+`to_prometheus()` renders the same numbers in Prometheus exposition format
+for scrape-style consumers (the serving frontend's ambition in ROADMAP).
+
+Both accept a single-host metrics pytree or an [S, ...]-stacked per-shard
+one (reduced via `metrics.combine_shards`), plus optional host-side serve
+counters (`WalkQueryService.obs_counters()`).
+"""
+from __future__ import annotations
+
+import json
+from typing import Optional
+
+import jax
+import numpy as np
+
+from repro.obs.metrics import (NEVER, OVERFLOW_SOURCES, PMIN_BUCKETS,
+                               StreamMetrics, combine_shards)
+
+SCHEMA = 1
+
+
+def _as_host(m: StreamMetrics) -> StreamMetrics:
+    m = jax.device_get(m)
+    if np.ndim(m.n_steps) == 1:  # [S, ...]-stacked per-shard metrics
+        m = combine_shards(jax.tree.map(np.asarray, m))
+        m = jax.device_get(m)
+    return m
+
+
+def summary(m: StreamMetrics, serve: Optional[dict] = None) -> dict:
+    """Stable JSON-serializable counter summary (plain python scalars)."""
+    m = _as_host(m)
+    steps = int(m.n_steps)
+    aff = int(m.affected_total)
+    sent = int(m.handoff_sent)
+    first = np.asarray(m.overflow_first_epoch, dtype=np.uint32)
+    out = {
+        "schema": SCHEMA,
+        "steps": steps,
+        "affected": {
+            "total": aff,
+            "max_per_step": int(m.affected_max),
+            "mean_per_step": round(aff / steps, 3) if steps else 0.0,
+        },
+        "rewalk_suffix_hist": {
+            # bucket b counts affected lanes with suffix fraction
+            # (l - p_min)/l in [b/NB, (b+1)/NB); full re-walks land last
+            "n_buckets": PMIN_BUCKETS,
+            "edges": [round(b / PMIN_BUCKETS, 4)
+                      for b in range(PMIN_BUCKETS + 1)],
+            "counts": [int(c) for c in np.asarray(m.pmin_hist)],
+        },
+        "pending": {"high_water_mark": int(m.pending_hwm)},
+        "merges": {"forced": int(m.merges_forced),
+                   "eager": int(m.merges_eager)},
+        "order2": {"deg_fallback_lane_steps": int(m.deg_fallback_lanes)},
+        "handoff": {
+            "sent_total": sent,
+            "cross_shard_total": int(m.handoff_cross),
+            "max_dest_load_per_step": int(m.handoff_max_load),
+            "mean_sent_per_step": round(sent / steps, 3) if steps else 0.0,
+        },
+        "overflow_first_epoch": {
+            name: (None if int(first[i]) == NEVER else int(first[i]))
+            for i, name in enumerate(OVERFLOW_SOURCES)
+        },
+    }
+    if serve is not None:
+        out["serve"] = {k: int(v) for k, v in serve.items()}
+    return out
+
+
+def to_prometheus(m, serve: Optional[dict] = None,
+                  prefix: str = "wharf") -> str:
+    """Prometheus exposition-format text of the same counters.
+
+    Accepts a StreamMetrics or an already-built `summary()` dict."""
+    s = m if isinstance(m, dict) else summary(m, serve=serve)
+    lines = []
+
+    def counter(name, value, help_txt, labels=""):
+        lines.append(f"# HELP {prefix}_{name} {help_txt}")
+        lines.append(f"# TYPE {prefix}_{name} counter")
+        lines.append(f"{prefix}_{name}{labels} {value}")
+
+    def gauge(name, value, help_txt):
+        lines.append(f"# HELP {prefix}_{name} {help_txt}")
+        lines.append(f"# TYPE {prefix}_{name} gauge")
+        lines.append(f"{prefix}_{name} {value}")
+
+    counter("stream_steps_total", s["steps"], "stream update steps observed")
+    counter("affected_walks_total", s["affected"]["total"],
+            "cumulative |MAV| affected walks")
+    gauge("affected_walks_max_per_step", s["affected"]["max_per_step"],
+          "max per-step |MAV|")
+    hist = s["rewalk_suffix_hist"]
+    cum = 0
+    for i, c in enumerate(hist["counts"]):
+        cum += c
+        lines.append(f'{prefix}_rewalk_suffix_fraction_bucket'
+                     f'{{le="{hist["edges"][i + 1]}"}} {cum}')
+    lines.append(f"{prefix}_rewalk_suffix_fraction_count {cum}")
+    gauge("pending_high_water", s["pending"]["high_water_mark"],
+          "pending version-block fill high-water mark")
+    counter("merges_total", s["merges"]["forced"],
+            "in-scan pending consolidations", labels='{cause="forced"}')
+    lines.append(f'{prefix}_merges_total{{cause="eager"}} '
+                 f'{s["merges"]["eager"]}')
+    counter("order2_deg_fallback_lane_steps_total",
+            s["order2"]["deg_fallback_lane_steps"],
+            "deg>dmax rejection-fallback sampling lane-steps")
+    counter("handoff_lanes_sent_total", s["handoff"]["sent_total"],
+            "frontier lanes routed through all_to_all")
+    counter("handoff_lanes_cross_shard_total",
+            s["handoff"]["cross_shard_total"],
+            "frontier lanes that changed shards")
+    gauge("handoff_max_dest_load", s["handoff"]["max_dest_load_per_step"],
+          "max lanes aimed at one destination shard in any step")
+    for name, epoch in s["overflow_first_epoch"].items():
+        if epoch is not None:
+            lines.append(f'{prefix}_overflow_first_epoch'
+                         f'{{source="{name}"}} {epoch}')
+    if "serve" in s:
+        for k, v in s["serve"].items():
+            counter(f"serve_{k}_total", v, f"serving-layer {k}")
+    return "\n".join(lines) + "\n"
+
+
+def write_summary(path: str, m: StreamMetrics,
+                  serve: Optional[dict] = None) -> dict:
+    """Dump `summary()` as JSON to `path`; returns the summary dict."""
+    s = summary(m, serve=serve)
+    with open(path, "w") as f:
+        json.dump(s, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return s

@@ -1,0 +1,132 @@
+"""Host-side phase tracing: profiler annotations + a JSONL span log.
+
+Two complementary mechanisms behind one `phase(...)` context manager:
+
+  * `jax.profiler.TraceAnnotation` + `jax.named_scope` — the span shows up
+    on the host timeline of a `jax.profiler` capture, and any op traced
+    inside a jit under the scope carries the phase name in its HLO op
+    metadata (so XLA profiles attribute device time to engine phases).
+  * an optional process-global `TraceLog` — each span is appended as one
+    Chrome-trace "complete" (`"ph": "X"`) event per line to a JSONL file.
+    `python -c 'import json,sys; print(json.dumps([json.loads(l) for l in
+    sys.stdin]))' < spans.jsonl > trace.json` produces a file chrome://
+    tracing / Perfetto loads directly; keeping the log line-oriented means
+    crashes lose at most one span and benchmarks can append concurrently.
+
+Phase taxonomy (DESIGN.md §10) — use these constants so trace consumers can
+group spans: FINDNEXT (packed-chunk decode / prefix traversal), INTERSECT
+(order-2 neighbor-window intersection), SAMPLE (SAMPLENEXT draws),
+WRITE_BACK (version-block append + slot-epoch bump), MERGE (pending
+consolidation), COLLECTIVE (cross-shard pmin / all_to_all), plus
+free-form "serve/<query>" spans from the serving layer.
+
+A span measures HOST wall time between enter and exit. Around a jitted
+call that includes dispatch plus however much device work the call blocks
+on — honest for end-to-end driver timing, NOT a per-phase device profile
+(that is what the TraceAnnotation/named_scope side of the same span is
+for, under a real profiler capture).
+"""
+from __future__ import annotations
+
+import contextlib
+import json
+import os
+import threading
+import time
+from typing import Optional
+
+import jax
+
+# in-jit engine phases (named_scope spelling: "wharf/<phase>")
+FINDNEXT = "findnext"
+INTERSECT = "intersect"
+SAMPLE = "sample"
+WRITE_BACK = "write_back"
+MERGE = "merge"
+COLLECTIVE = "collective"
+PHASES = (FINDNEXT, INTERSECT, SAMPLE, WRITE_BACK, MERGE, COLLECTIVE)
+
+
+class TraceLog:
+    """Append-only Chrome-trace JSONL span sink (one event object per line).
+
+    Timestamps are microseconds since the log was opened (`ts`), durations
+    microseconds (`dur`) — the Chrome trace-event "X" convention."""
+
+    def __init__(self, path: str):
+        self.path = path
+        self._f = open(path, "a", buffering=1)
+        self._t0 = time.perf_counter()
+        self._lock = threading.Lock()
+
+    def now_us(self) -> float:
+        return (time.perf_counter() - self._t0) * 1e6
+
+    def event(self, name: str, cat: str, ts_us: float, dur_us: float,
+              args: Optional[dict] = None) -> None:
+        ev = {"name": name, "cat": cat, "ph": "X",
+              "ts": round(ts_us, 3), "dur": round(dur_us, 3),
+              "pid": os.getpid(), "tid": threading.get_ident()}
+        if args:
+            ev["args"] = args
+        line = json.dumps(ev, sort_keys=True)
+        with self._lock:
+            self._f.write(line + "\n")
+
+    def close(self) -> None:
+        self._f.close()
+
+
+_LOG: Optional[TraceLog] = None
+
+
+def install(path: str) -> TraceLog:
+    """Open `path` as the process-global span log (appending). Subsequent
+    `phase(...)` spans are recorded until `uninstall()`."""
+    global _LOG
+    if _LOG is not None:
+        _LOG.close()
+    _LOG = TraceLog(path)
+    return _LOG
+
+
+def uninstall() -> None:
+    global _LOG
+    if _LOG is not None:
+        _LOG.close()
+    _LOG = None
+
+
+def active() -> Optional[TraceLog]:
+    return _LOG
+
+
+@contextlib.contextmanager
+def phase(name: str, cat: str = "engine", **args):
+    """Span a host-side phase: profiler annotation + named_scope + JSONL.
+
+    `name` is free-form ("serve/ppr_row") or one of the PHASES constants;
+    `args` become the Chrome-trace event's `args` payload. Zero-cost beyond
+    the two jax context managers when no TraceLog is installed."""
+    log = _LOG
+    t0 = time.perf_counter()
+    with jax.profiler.TraceAnnotation(name), jax.named_scope(name):
+        try:
+            yield
+        finally:
+            if log is not None:
+                dur = (time.perf_counter() - t0) * 1e6
+                ts = (t0 - log._t0) * 1e6
+                log.event(name, cat, ts, dur, args or None)
+
+
+def read_spans(path: str) -> list:
+    """Parse a JSONL span log back into a list of event dicts (helper for
+    tests and for wrapping into a chrome://tracing-loadable JSON array)."""
+    out = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if line:
+                out.append(json.loads(line))
+    return out

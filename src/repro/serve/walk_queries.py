@@ -51,6 +51,7 @@ from repro.core.packed_store import CHUNK
 from repro.core.ppr import ppr_scores
 from repro.core.store import WalkStore
 from repro.core.update import WalkEngine
+from repro.obs import trace
 
 U32 = jnp.uint32
 I32 = jnp.int32
@@ -65,6 +66,21 @@ class WalkQueryService:
     _wm_cache: object = field(default=None, repr=False)
     _wm_epoch: int = field(default=-1, repr=False)
     _emb_normed: object = field(default=None, repr=False)
+    # host-side serve counters (obs/export.py `summary(..., serve=...)`):
+    # epoch-keyed walk-matrix/ppr cache effectiveness + snapshot rebuilds
+    _wm_hits: int = field(default=0, repr=False)
+    _wm_misses: int = field(default=0, repr=False)
+    _overlay_rebuilds: int = field(default=0, repr=False)
+
+    def obs_counters(self) -> dict:
+        """Serving-layer counters for `obs.export.summary(m, serve=...)`.
+
+        `ppr_cache_hit`/`ppr_cache_miss` count walk-matrix cache outcomes —
+        the cache every `ppr_row` rides — keyed on the engine epoch (stable
+        across merges, invalidated by updates)."""
+        return {"ppr_cache_hit": self._wm_hits,
+                "ppr_cache_miss": self._wm_misses,
+                "overlay_rebuilds": self._overlay_rebuilds}
 
     def snapshot(self) -> Overlay:
         """Consistent read snapshot — mergeless and O(|pending|) to build.
@@ -73,8 +89,11 @@ class WalkQueryService:
         `materialize()` for a snapshot that must outlive further updates."""
         state = self.engine.state
         if self._overlay_cache is None or self._overlay_state is not state:
-            self._overlay_cache = Overlay.build(state.store, state.pending)
+            with trace.phase("serve/snapshot", cat="serve"):
+                self._overlay_cache = Overlay.build(state.store,
+                                                    state.pending)
             self._overlay_state = state
+            self._overlay_rebuilds += 1
         return self._overlay_cache
 
     def materialize(self) -> WalkStore:
@@ -85,9 +104,10 @@ class WalkQueryService:
 
     def next_vertices(self, v, w, p):
         """Batched FINDNEXT: (v_next uint32[B], found bool[B])."""
-        return self.snapshot().find_next(
-            jnp.asarray(v, U32), jnp.asarray(w, U32), jnp.asarray(p, U32),
-            backend=self.backend)
+        with trace.phase("serve/next_vertices", cat="serve"):
+            return self.snapshot().find_next(
+                jnp.asarray(v, U32), jnp.asarray(w, U32),
+                jnp.asarray(p, U32), backend=self.backend)
 
     def walks_of(self, vertices, capacity: int):
         """Walk ids visiting each vertex: int32 [B, 2*capacity], -1 padded.
@@ -144,13 +164,18 @@ class WalkQueryService:
         stable across merges)."""
         epoch = self.engine.epoch_counter
         if self._wm_cache is None or self._wm_epoch != epoch:
-            ov = self.snapshot()
-            store = ov.base
-            w = jnp.arange(store.n_walks, dtype=U32)
-            start = walk_start_vertex(w, self.engine.cfg.n_walks_per_vertex)
-            self._wm_cache = ov.traverse(w, start, store.length - 1,
-                                         backend=self.backend)
+            self._wm_misses += 1
+            with trace.phase("serve/walk_matrix", cat="serve", epoch=epoch):
+                ov = self.snapshot()
+                store = ov.base
+                w = jnp.arange(store.n_walks, dtype=U32)
+                start = walk_start_vertex(
+                    w, self.engine.cfg.n_walks_per_vertex)
+                self._wm_cache = ov.traverse(w, start, store.length - 1,
+                                             backend=self.backend)
             self._wm_epoch = epoch
+        else:
+            self._wm_hits += 1
         return self._wm_cache
 
     def set_embedding_table(self, table) -> None:
@@ -184,6 +209,7 @@ class WalkQueryService:
         repeated PPR queries between updates cost one O(n) row read instead
         of a full merge + O(l) corpus traversal per call."""
         walks = self.walk_matrix()
-        scores = ppr_scores(walks, self.engine.store.n_vertices,
-                            restart_prob)
-        return scores[v]
+        with trace.phase("serve/ppr_row", cat="serve", v=int(v)):
+            scores = ppr_scores(walks, self.engine.store.n_vertices,
+                                restart_prob)
+            return scores[v]

@@ -1,0 +1,523 @@
+"""Observability subsystem tests (DESIGN.md §10): the hard contract is
+
+  (a) metrics OFF (the WalkConfig default) is compiled OUT — the streaming
+      drivers lower to the exact pre-observability HLO (checked against an
+      in-test reconstruction of the pre-PR scan, byte-identical modulo the
+      jit module name), and no "obs_metrics"-scoped op leaks into the OFF
+      executable;
+  (b) metrics ON leaves engine outputs BIT-identical, on mixed
+      insert+delete streams, for both merge policies, single-host and on
+      the 8-shard shard_map engine (subprocess, forced host devices);
+  (c) the exported counters match a pure-python/numpy replay of the same
+      stream: |MAV| totals, the p_min suffix histogram, the merge schedule
+      closed form, the deg>dmax fallback lanes, and (sharded) the global
+      all_to_all handoff volume.
+
+Plus format/plumbing coverage: export JSON schema + Prometheus text, trace
+JSONL roundtrip, maintainer metrics, and launch/profile_cell import purity.
+"""
+import importlib
+import os
+import re
+import subprocess
+import sys
+import textwrap
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import StreamingGraph, WalkConfig, generate_corpus
+from repro.core.update import (EngineState, I32, WalkEngine, _apply_update,
+                               _merge_state, _run_stream_jit,
+                               _run_stream_obs_jit)
+from repro.core.walkers import WalkModel
+from repro.data.streams import mixed_edge_stream, rmat_edges
+from repro.obs import NEVER, PMIN_BUCKETS, StreamMetrics
+from repro.obs import trace as obs_trace
+from repro.obs.export import summary, to_prometheus, write_summary
+
+LOG2_N = 6
+N = 2 ** LOG2_N
+CAP = 128
+MAX_PENDING = 4
+N_BATCHES = 5
+
+
+def run_sub(code: str):
+    """8-forced-host-device subprocess runner (same contract as
+    tests/test_distr.py): the main test process keeps its single-device
+    view; JAX_PLATFORMS=cpu skips accelerator-plugin retry backoff."""
+    res = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(code)],
+        capture_output=True, text=True, timeout=600,
+        env={"XLA_FLAGS": "--xla_force_host_platform_device_count=8",
+             "JAX_PLATFORMS": "cpu",
+             "PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
+        cwd=".",
+    )
+    assert res.returncode == 0, f"stdout:\n{res.stdout}\nstderr:\n{res.stderr}"
+    return res.stdout
+
+
+def make_graph_store(cfg, seed=0):
+    src, dst = rmat_edges(jax.random.PRNGKey(seed), 200, LOG2_N)
+    g = StreamingGraph.from_edges(src, dst, N, 4096)
+    store = generate_corpus(jax.random.PRNGKey(seed + 1), g, cfg)
+    return g, store
+
+
+def make_stream(n_batches=N_BATCHES, seed=7):
+    i_s, i_d, d_s, d_d = mixed_edge_stream(jax.random.PRNGKey(seed),
+                                           n_batches, 10, 4, LOG2_N)
+    return i_s, i_d, d_s, d_d
+
+
+def make_engine(g, store, cfg, policy):
+    # run_stream DONATES the engine buffers: every engine gets its own
+    # copies so OFF/ON runs on "the same" graph+store really are
+    return WalkEngine(graph=jax.tree.map(jnp.array, g),
+                      store=jax.tree.map(jnp.array, store), cfg=cfg,
+                      merge_policy=policy, rewalk_capacity=CAP,
+                      max_pending=MAX_PENDING)
+
+
+# ---------------------------------------------------------------- (a) HLO
+
+
+def _normalize_hlo(text: str) -> str:
+    """Strip the jit module name (the only legitimate OFF/ref difference)."""
+    return re.sub(r"@jit_[A-Za-z0-9_]+", "@jit_X", text)
+
+
+@pytest.mark.parametrize("policy", ["on-demand", "eager"])
+def test_metrics_off_hlo_identity(policy):
+    """OFF path lowers byte-identical to a reconstruction of the PRE-PR
+    stream scan (cond-merge + _apply_update + eager merge, no metrics
+    anywhere near the trace) — observability off is compiled out, not just
+    disabled."""
+    cfg = WalkConfig(n_walks_per_vertex=2, length=8)
+    g, store = make_graph_store(cfg)
+    i_s, i_d, d_s, d_d = make_stream()
+    keys = jax.random.split(jax.random.PRNGKey(3), N_BATCHES)
+    state = EngineState.create(g, store, MAX_PENDING, CAP * cfg.length)
+    mav_cap = store.size
+
+    off = _run_stream_jit.lower(
+        state, keys, i_s, i_d, d_s, d_d, cfg=cfg, capacity=CAP,
+        mav_capacity=mav_cap, max_pending=MAX_PENDING, merge_policy=policy,
+        merge_impl="interleave").as_text()
+    assert "obs_metrics" not in off
+
+    merge = partial(_merge_state, cfg=cfg, merge_impl="interleave")
+
+    @partial(jax.jit, donate_argnums=(0,))
+    def ref(state, keys, i_s, i_d, d_s, d_d):
+        def body(s, xs):
+            k, a, b, c, d = xs
+            s = jax.lax.cond(s.n_pending >= jnp.asarray(MAX_PENDING, I32),
+                             merge, lambda x: x, s)
+            s, _ = _apply_update(s, a, b, c, d, k, cfg, CAP, mav_cap)
+            if policy == "eager":
+                s = merge(s)
+            return s, s.last_affected
+        return jax.lax.scan(body, state, (keys, i_s, i_d, d_s, d_d))
+
+    ref_text = ref.lower(state, keys, i_s, i_d, d_s, d_d).as_text()
+    assert _normalize_hlo(off) == _normalize_hlo(ref_text), \
+        "metrics-OFF run_stream no longer traces the pre-observability HLO"
+
+
+def test_metrics_scope_in_compiled_executables():
+    """named_scope survives into the COMPILED HLO op metadata: the ON
+    executable carries "obs_metrics" (so the OFF-side leak detector in the
+    identity test above is a live check, not vacuously true) and the OFF
+    executable does not. Tiny config to keep the two compiles cheap."""
+    cfg = WalkConfig(n_walks_per_vertex=1, length=4)
+    g, store = make_graph_store(cfg)
+    i_s, i_d, d_s, d_d = make_stream(n_batches=2)
+    keys = jax.random.split(jax.random.PRNGKey(3), 2)
+    kw = dict(cfg=cfg, capacity=32, mav_capacity=store.size,
+              max_pending=MAX_PENDING, merge_policy="on-demand",
+              merge_impl="interleave")
+    state = EngineState.create(g, store, MAX_PENDING, 32 * cfg.length)
+    off = _run_stream_jit.lower(state, keys, i_s, i_d, d_s, d_d,
+                                **kw).compile().as_text()
+    assert "obs_metrics" not in off
+    on = _run_stream_obs_jit.lower(state, StreamMetrics.empty(), keys, i_s,
+                                   i_d, d_s, d_d, **kw).compile().as_text()
+    assert "obs_metrics" in on
+
+
+# ------------------------------------------------- (b) + (c) single host
+
+
+def _replay_counters(affected, aux, length, n_batches, policy):
+    """Pure-numpy replay of the single-host counters from the OFF run's
+    per-step outputs (affected counts + stacked UpdateAux)."""
+    affected = np.asarray(affected)
+    p_min = np.asarray(aux.p_min)          # [n_batches, CAP]
+    valid = np.asarray(aux.lane_valid)
+    hist = np.zeros(PMIN_BUCKETS, np.int64)
+    suffix = length - p_min
+    bucket = np.clip((suffix * PMIN_BUCKETS) // length, 0, PMIN_BUCKETS - 1)
+    for b in range(PMIN_BUCKETS):
+        hist[b] = int(((bucket == b) & valid).sum())
+    # merge-schedule closed form, step by step (stream_step order: forced
+    # cond-merge -> append -> eager merge; hwm reads post-append fill)
+    fill = hwm = forced = eager = 0
+    for _ in range(n_batches):
+        if fill >= MAX_PENDING:
+            fill = 0
+            forced += 1
+        fill += 1
+        hwm = max(hwm, fill)
+        if policy == "eager":
+            fill = 0
+            eager += 1
+    return {
+        "steps": n_batches,
+        "affected_total": int(affected.sum()),
+        "affected_max": int(affected.max()),
+        "pmin_hist": hist,
+        "pending_hwm": hwm,
+        "merges_forced": forced,
+        "merges_eager": eager,
+        # global all_to_all volume: each valid lane is routed once per
+        # non-terminal re-walked position, i.e. (l-1) - p_min times
+        "handoff_sent": int((np.maximum(length - 1 - p_min, 0)
+                             * valid).sum()),
+    }
+
+
+@pytest.mark.parametrize("policy", ["on-demand", "eager"])
+def test_metrics_on_bit_identity_and_replay(policy):
+    """Metrics ON vs OFF on the same mixed stream: identical per-step
+    affected counts, identical UpdateAux, identical merged store + graph;
+    the ON run's exported counters equal the numpy replay of the OFF run."""
+    cfg = WalkConfig(n_walks_per_vertex=2, length=8)
+    g, store = make_graph_store(cfg)
+    i_s, i_d, d_s, d_d = make_stream()
+    key = jax.random.PRNGKey(3)
+
+    eng_off = make_engine(g, store, cfg, policy)
+    aff_off, aux_off = eng_off.run_stream(key, i_s, i_d, d_s, d_d,
+                                          return_masks=True)
+    eng_on = make_engine(g, store, cfg._replace(metrics=True), policy)
+    aff_on, aux_on = eng_on.run_stream(key, i_s, i_d, d_s, d_d,
+                                       return_masks=True)
+    assert eng_on.metrics is not None
+
+    np.testing.assert_array_equal(np.asarray(aff_off), np.asarray(aff_on))
+    for f in ("walk_ids", "lane_valid", "p_min"):
+        np.testing.assert_array_equal(np.asarray(getattr(aux_off, f)),
+                                      np.asarray(getattr(aux_on, f)),
+                                      err_msg=f)
+    eng_off.merge()
+    eng_on.merge()
+    assert not eng_off.mav_overflowed and not eng_on.mav_overflowed
+    np.testing.assert_array_equal(np.asarray(eng_off.graph.codes),
+                                  np.asarray(eng_on.graph.codes))
+    for f in ("owner", "code", "epoch", "slot_epoch", "offsets", "packed",
+              "widths"):
+        np.testing.assert_array_equal(np.asarray(getattr(eng_off.store, f)),
+                                      np.asarray(getattr(eng_on.store, f)),
+                                      err_msg=(policy, f))
+
+    want = _replay_counters(aff_off, aux_off, cfg.length, N_BATCHES, policy)
+    s = summary(eng_on.metrics)
+    assert s["steps"] == want["steps"]
+    assert s["affected"]["total"] == want["affected_total"]
+    assert s["affected"]["max_per_step"] == want["affected_max"]
+    assert s["rewalk_suffix_hist"]["counts"] == list(want["pmin_hist"])
+    assert s["pending"]["high_water_mark"] == want["pending_hwm"]
+    assert s["merges"] == {"forced": want["merges_forced"],
+                           "eager": want["merges_eager"]}
+    assert s["order2"]["deg_fallback_lane_steps"] == 0  # order-1 model
+    assert s["handoff"]["sent_total"] == 0              # single host
+    assert all(v is None for v in s["overflow_first_epoch"].values())
+
+
+def test_deg_fallback_counter_replay():
+    """Order-2 factorized stream, ONE batch (so the final graph is the
+    graph every lane sampled against): deg_fallback_lanes equals the numpy
+    count of emitted non-terminal positions whose current vertex has
+    deg > dmax, read off the final corpus + final degrees."""
+    model = WalkModel(order=2, p=0.5, q=2.0, sampler="factorized", dmax=4)
+    cfg = WalkConfig(n_walks_per_vertex=2, length=8, model=model,
+                     metrics=True)
+    g, store = make_graph_store(cfg)
+    i_s, i_d, d_s, d_d = make_stream(n_batches=1)
+    eng = make_engine(g, store, cfg, "on-demand")
+    aff, aux = eng.run_stream(jax.random.PRNGKey(3), i_s, i_d, d_s, d_d,
+                              return_masks=True)
+    walks = np.asarray(eng.walk_matrix())       # post-update corpus
+    deg = np.asarray(eng.graph.degrees())
+    p_min = np.asarray(aux.p_min[0])
+    valid = np.asarray(aux.lane_valid[0])
+    wids = np.asarray(aux.walk_ids[0])
+    want = 0
+    for w, pm, ok in zip(wids, p_min, valid):
+        if not ok:
+            continue
+        for p in range(int(pm), cfg.length - 1):   # emitted non-terminal
+            if deg[walks[w, p]] > model.dmax:
+                want += 1
+    got = summary(eng.metrics)["order2"]["deg_fallback_lane_steps"]
+    assert got == want
+    assert want > 0, "fixture too sparse to exercise the deg>dmax fallback"
+
+
+# ------------------------------------------------------------ (b) sharded
+
+
+def test_sharded_metrics_bit_identity_and_replay():
+    """8-shard shard_map engine with metrics ON: bit-identical to the
+    single-host metrics-OFF run (stores, graph, affected); replicated
+    counters uniform across shards; combined counters match the numpy
+    replay (including the exact global handoff volume)."""
+    run_sub("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core import StreamingGraph, generate_corpus
+        from repro.core.corpus import WalkConfig
+        from repro.core.update import WalkEngine, pending_after_stream
+        from repro.data.streams import mixed_edge_stream, rmat_edges
+        from repro.distr.sharded import (ShardSpec, shard_state,
+                                         sharded_run_stream, unshard_state)
+        from repro.obs.export import summary
+        from repro.obs.metrics import PMIN_BUCKETS
+
+        n, ecap, cap, nb = 64, 4096, 128, 6
+        cfg = WalkConfig(n_walks_per_vertex=2, length=8, megakernel="off")
+        src, dst = rmat_edges(jax.random.PRNGKey(0), 200, 6)
+        graph = StreamingGraph.from_edges(src, dst, n, ecap)
+        store = generate_corpus(jax.random.PRNGKey(1), graph, cfg)
+        i_s, i_d, d_s, d_d = mixed_edge_stream(
+            jax.random.PRNGKey(2), nb, 16, 4, 6)
+        key = jax.random.PRNGKey(3)
+        spec = ShardSpec(n_shards=8, n_vertices=n, edge_capacity=1024,
+                         store_capacity=512, mav_capacity=512, slab=cap)
+
+        for policy in ("on-demand", "eager"):
+            eng = WalkEngine(graph=jax.tree.map(jnp.array, graph),
+                             store=jax.tree.map(jnp.array, store),
+                             cfg=cfg, merge_policy=policy,
+                             rewalk_capacity=cap, max_pending=4)
+            ref_aff, ref_aux = eng.run_stream(key, i_s, i_d, d_s, d_d,
+                                              return_masks=True)
+            eng.merge()
+            assert not eng.mav_overflowed
+
+            cfg_on = cfg._replace(metrics=True)
+            stacked = shard_state(jax.tree.map(jnp.array, graph),
+                                  jax.tree.map(jnp.array, store), spec,
+                                  cap, max_pending=4)
+            stacked, aff, m = sharded_run_stream(
+                stacked, key, i_s, i_d, d_s, d_d, cfg=cfg_on, spec=spec,
+                capacity=cap, max_pending=4, merge_policy=policy)
+            g2, s2, ovf = unshard_state(stacked, ecap)
+            assert not ovf
+            assert np.array_equal(np.asarray(ref_aff), np.asarray(aff))
+            assert np.array_equal(np.asarray(eng.graph.codes),
+                                  np.asarray(g2.codes)), policy
+            for f in ("owner", "code", "epoch", "slot_epoch"):
+                assert np.array_equal(np.asarray(getattr(eng.store, f)),
+                                      np.asarray(getattr(s2, f))), \\
+                    (policy, f)
+
+            # replicated counters are uniform across the 8 shards
+            for leaf in (m.n_steps, m.affected_total, m.affected_max,
+                         m.pending_hwm, m.merges_forced, m.merges_eager):
+                assert np.ptp(np.asarray(leaf)) == 0, policy
+            assert (np.asarray(m.pmin_hist)
+                    == np.asarray(m.pmin_hist)[0]).all()
+
+            # combined counters vs numpy replay of the reference run
+            s = summary(m)   # [S,...]-stacked -> combine_shards inside
+            aff_np = np.asarray(ref_aff)
+            p_min = np.asarray(ref_aux.p_min)
+            valid = np.asarray(ref_aux.lane_valid)
+            assert s["steps"] == nb
+            assert s["affected"]["total"] == int(aff_np.sum())
+            assert s["affected"]["max_per_step"] == int(aff_np.max())
+            suffix = cfg.length - p_min
+            bucket = np.clip((suffix * PMIN_BUCKETS) // cfg.length, 0,
+                             PMIN_BUCKETS - 1)
+            hist = [int(((bucket == b) & valid).sum())
+                    for b in range(PMIN_BUCKETS)]
+            assert s["rewalk_suffix_hist"]["counts"] == hist, policy
+            if policy == "eager":
+                assert s["merges"] == {"forced": 0, "eager": nb}
+            else:
+                fill = pending_after_stream(0, nb, 4, policy)
+                assert s["merges"]["eager"] == 0
+                assert s["merges"]["forced"] == (nb - fill) // 4
+            # exact global handoff volume: each valid lane is routed once
+            # per non-terminal re-walked position
+            want_sent = int((np.maximum(cfg.length - 1 - p_min, 0)
+                             * valid).sum())
+            assert s["handoff"]["sent_total"] == want_sent, policy
+            assert 0 <= s["handoff"]["cross_shard_total"] <= want_sent
+            assert s["handoff"]["max_dest_load_per_step"] <= cap
+            assert all(v is None
+                       for v in s["overflow_first_epoch"].values())
+            print("OK", policy, "sent", want_sent)
+        print("OK sharded metrics bit-identical + replay")
+    """)
+
+
+# --------------------------------------------------------------- maintainer
+
+
+def test_maintainer_metrics_bit_identity():
+    """cfg.walk.metrics on the co-scheduled maintainer: per-step training
+    metrics and the final (engine + model) state stay bit-identical, and
+    the engine-side counters accumulate across run_stream calls."""
+    from repro.downstream import EmbeddingMaintainer, MaintainerConfig
+
+    wcfg = WalkConfig(n_walks_per_vertex=2, length=8)
+    g, store = make_graph_store(wcfg)
+    i_s, i_d, d_s, d_d = make_stream()
+
+    def build(metrics):
+        cfg = MaintainerConfig(walk=wcfg._replace(metrics=metrics),
+                               n_vertices=N, dim=16, window=2, n_negative=3,
+                               rewalk_capacity=CAP, max_pending=MAX_PENDING)
+        return EmbeddingMaintainer(graph=jax.tree.map(jnp.array, g),
+                                   store=jax.tree.map(jnp.array, store),
+                                   cfg=cfg, key=jax.random.PRNGKey(5))
+
+    key = jax.random.PRNGKey(6)
+    mt_off, mt_on = build(False), build(True)
+    out_off = mt_off.run_stream(key, i_s, i_d, d_s, d_d)
+    out_on = mt_on.run_stream(key, i_s, i_d, d_s, d_d)
+    for a, b in zip(jax.tree.leaves(out_off), jax.tree.leaves(out_on)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for a, b in zip(jax.tree.leaves(mt_off.state),
+                    jax.tree.leaves(mt_on.state)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert int(mt_on.metrics.n_steps) == N_BATCHES
+    assert (int(mt_on.metrics.affected_total)
+            == int(mt_on.state.engine.total_affected))
+    # a second stream continues the same counters (accumulate, not reset)
+    i2, j2, k2, l2 = make_stream(n_batches=2, seed=8)
+    mt_on.run_stream(jax.random.PRNGKey(7), i2, j2, k2, l2)
+    assert int(mt_on.metrics.n_steps) == N_BATCHES + 2
+
+
+# ------------------------------------------------------- export + trace
+
+
+def _fake_metrics():
+    m = StreamMetrics.empty()
+    return m.replace(
+        n_steps=jnp.asarray(4, I32), affected_total=jnp.asarray(100, I32),
+        affected_max=jnp.asarray(40, I32),
+        pmin_hist=jnp.asarray([0, 1, 2, 3, 4, 5, 6, 79], I32),
+        pending_hwm=jnp.asarray(3, I32), merges_forced=jnp.asarray(1, I32),
+        merges_eager=jnp.asarray(0, I32),
+        handoff_sent=jnp.asarray(64, I32),
+        handoff_cross=jnp.asarray(16, I32),
+        handoff_max_load=jnp.asarray(9, I32),
+        overflow_first_epoch=jnp.asarray([NEVER, 3, NEVER, NEVER],
+                                         jnp.uint32))
+
+
+def test_export_summary_schema_and_prometheus(tmp_path):
+    s = summary(_fake_metrics(), serve={"ppr_cache_hit": 7,
+                                        "ppr_cache_miss": 2})
+    assert s["schema"] == 1
+    assert s["affected"] == {"total": 100, "max_per_step": 40,
+                             "mean_per_step": 25.0}
+    assert sum(s["rewalk_suffix_hist"]["counts"]) == 100
+    assert len(s["rewalk_suffix_hist"]["edges"]) == PMIN_BUCKETS + 1
+    assert s["overflow_first_epoch"] == {"graph": None, "store_merge": 3,
+                                         "mav_gather": None,
+                                         "handoff_slab": None}
+    assert s["serve"] == {"ppr_cache_hit": 7, "ppr_cache_miss": 2}
+
+    text = to_prometheus(s)
+    assert "wharf_stream_steps_total 4" in text
+    assert "wharf_affected_walks_total 100" in text
+    assert 'wharf_merges_total{cause="forced"} 1' in text
+    assert 'wharf_overflow_first_epoch{source="store_merge"} 3' in text
+    assert 'source="graph"' not in text          # never tripped -> no line
+    assert 'wharf_rewalk_suffix_fraction_bucket{le="1.0"} 100' in text
+    assert "wharf_serve_ppr_cache_hit_total 7" in text
+    # to_prometheus accepts the raw pytree too and agrees with the dict
+    assert to_prometheus(_fake_metrics()).splitlines()[0] == \
+        text.splitlines()[0]
+
+    p = tmp_path / "counters.json"
+    out = write_summary(str(p), _fake_metrics())
+    import json
+    assert json.loads(p.read_text()) == out
+
+
+def test_export_combines_stacked_shards():
+    """summary() on a [S,...]-stacked pytree reduces per combine_shards:
+    shard-0 replicated counters, summed handoff, earliest overflow."""
+    a, b = _fake_metrics(), _fake_metrics().replace(
+        handoff_sent=jnp.asarray(36, I32),
+        handoff_max_load=jnp.asarray(11, I32),
+        overflow_first_epoch=jnp.asarray([5, 9, NEVER, NEVER], jnp.uint32))
+    stacked = jax.tree.map(lambda *ls: jnp.stack(ls), a, b)
+    s = summary(stacked)
+    assert s["affected"]["total"] == 100          # shard 0, not the sum
+    assert s["handoff"]["sent_total"] == 100      # 64 + 36
+    assert s["handoff"]["max_dest_load_per_step"] == 11
+    assert s["overflow_first_epoch"]["graph"] == 5
+    assert s["overflow_first_epoch"]["store_merge"] == 3
+
+
+def test_trace_jsonl_roundtrip(tmp_path):
+    path = str(tmp_path / "spans.jsonl")
+    obs_trace.install(path)
+    try:
+        with obs_trace.phase("serve/ppr_row", cat="serve", v=3):
+            pass
+        with obs_trace.phase(obs_trace.MERGE):
+            pass
+    finally:
+        obs_trace.uninstall()
+    assert obs_trace.active() is None
+    spans = obs_trace.read_spans(path)
+    assert [e["name"] for e in spans] == ["serve/ppr_row", "merge"]
+    for e in spans:
+        assert e["ph"] == "X" and e["dur"] >= 0 and e["ts"] >= 0
+    assert spans[0]["cat"] == "serve" and spans[0]["args"] == {"v": 3}
+    assert spans[1]["cat"] == "engine"
+    # with no log installed, phase() is a pure annotation no-op
+    with obs_trace.phase("uninstalled"):
+        pass
+    assert len(obs_trace.read_spans(path)) == 2
+
+
+def test_serve_counters():
+    from repro.serve.walk_queries import WalkQueryService
+
+    cfg = WalkConfig(n_walks_per_vertex=2, length=8)
+    g, store = make_graph_store(cfg)
+    eng = make_engine(g, store, cfg, "on-demand")
+    svc = WalkQueryService(engine=eng)
+    svc.walk_matrix()
+    svc.walk_matrix()            # same epoch -> cache hit
+    c = svc.obs_counters()
+    assert c["ppr_cache_miss"] == 1 and c["ppr_cache_hit"] == 1
+    assert c["overlay_rebuilds"] >= 1
+
+
+# ----------------------------------------------------------- import purity
+
+
+def test_profile_cell_import_is_pure():
+    """Importing launch.profile_cell must not mutate XLA_FLAGS (the
+    device-topology poisoning ISSUE 8 satellite 2 removed)."""
+    before = os.environ.get("XLA_FLAGS")
+    sys.modules.pop("repro.launch.profile_cell", None)
+    mod = importlib.import_module("repro.launch.profile_cell")
+    assert os.environ.get("XLA_FLAGS") == before
+    # the mutation is an explicit opt-in helper now
+    assert callable(mod._force_host_devices)
