@@ -1,0 +1,237 @@
+"""Serving frontend latency under a live update stream (DESIGN.md §11).
+
+The serving claim behind the paper's motivation (walk consumers — GRL
+trainers, PPR scorers, recommenders — read WHILE the graph streams): the
+batched multi-query engine answers all five query kinds against both the
+live mergeless view and a pinned snapshot, concurrent with `run_stream`
+windows applying mixed insert+delete batches to the same engine.
+
+The headline numbers land in BENCH_SERVE.json:
+  * under_stream — p50/p99 wall latency per query BATCH for each of the
+    five query kinds, live view vs pinned snapshot, sampled between stream
+    windows. Live p99 absorbs the per-epoch cache rebuild (walk matrix /
+    PPR table recompute after each update window); the pinned view stays
+    cache-warm — the §11 pin contract made measurable.
+  * batched_vs_percall — us/query of one B-sized batched dispatch vs B
+    singleton calls (the tentpole delta: shape-bucketed jit batching vs
+    the pre-§11 per-call path).
+  * pin — bit-identity proof: answers captured from the pin before the
+    stream equal the re-queried answers after every window (including a
+    donated post-release `run_stream`, whose live reads then diverge).
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+# standalone invocation (`python benchmarks/bench_serve.py --smoke`, the CI
+# serve-smoke step): mirror run.py's path bootstrap
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for _p in (_ROOT, os.path.join(_ROOT, "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from benchmarks.common import emit, write_json
+from repro.core import StreamingGraph, WalkConfig, generate_corpus
+from repro.core.update import WalkEngine
+from repro.data.streams import mixed_edge_stream, rmat_edges
+from repro.serve.walk_queries import WalkQueryService
+
+EMB_DIM = 32
+
+
+def sizes():
+    if common.SMOKE:
+        return dict(log2_n=6, n_edges=300, n_w=2, length=8, windows=2,
+                    batch_edges=8, del_edges=4, q_batch=8, reps=2,
+                    capacity=128)
+    return dict(log2_n=10, n_edges=8000, n_w=2, length=10, windows=6,
+                batch_edges=48, del_edges=12, q_batch=16, reps=6,
+                capacity=256)
+
+
+def build(sz):
+    n = 2 ** sz["log2_n"]
+    src, dst = rmat_edges(jax.random.PRNGKey(0), sz["n_edges"], sz["log2_n"])
+    g = StreamingGraph.from_edges(src, dst, n,
+                                  edge_capacity=4 * sz["n_edges"])
+    cfg = WalkConfig(n_walks_per_vertex=sz["n_w"], length=sz["length"])
+    store = generate_corpus(jax.random.PRNGKey(1), g, cfg)
+    eng = WalkEngine(graph=g, store=store, cfg=cfg,
+                     rewalk_capacity=min(n * sz["n_w"], 1 << 13),
+                     mav_capacity=min(store.size, 1 << 17),
+                     max_pending=2 * sz["windows"] + 2)
+    return WalkQueryService(engine=eng)
+
+
+def query_fns(svc, sz, rng):
+    """kind -> () -> blocked result, with fresh random ids per call."""
+    n = 2 ** sz["log2_n"]
+    n_walks = n * sz["n_w"]
+    b = sz["q_batch"]
+
+    def ids(hi, m=b):
+        return rng.integers(0, hi, size=m).astype(np.uint32)
+
+    def fns(snap=None):
+        return {
+            "next_vertices": lambda: jax.block_until_ready(
+                svc.next_vertices(ids(n), ids(n_walks),
+                                  ids(sz["length"] - 1), snapshot=snap)[0]),
+            "walks_of": lambda: jax.block_until_ready(
+                svc.walks_of(ids(n), capacity=sz["capacity"],
+                             snapshot=snap)),
+            "neighborhoods": lambda: jax.block_until_ready(
+                svc.neighborhoods(ids(n), hops=2, snapshot=snap)),
+            "ppr_rows": lambda: jax.block_until_ready(
+                svc.ppr_rows(ids(n), snapshot=snap)),
+            "embedding_neighbors": lambda: jax.block_until_ready(
+                svc.embedding_neighbors(ids(n), k=8)[0]),
+        }
+    return fns
+
+
+def pinned_answers(svc, snap, sz):
+    """Deterministic probe answers for the bit-identity check."""
+    probes = np.asarray([1, 5, 9], np.uint32)
+    wof = np.asarray(svc.walks_of(probes, capacity=sz["capacity"],
+                                  snapshot=snap))
+    return {
+        "walks_of": [frozenset(int(w) for w in row if w >= 0)
+                     for row in wof],
+        "neighborhoods": np.asarray(
+            svc.neighborhoods(probes, hops=2, snapshot=snap)),
+        "ppr": np.asarray(svc.ppr_rows(probes, snapshot=snap)),
+    }
+
+
+def run():
+    sz = sizes()
+    n = 2 ** sz["log2_n"]
+    svc = build(sz)
+    eng = svc.engine
+    rng = np.random.default_rng(7)
+    svc.set_embedding_table(
+        jax.random.normal(jax.random.PRNGKey(5), (n, EMB_DIM)))
+
+    # the live mixed stream: `windows` one-batch run_stream windows
+    i_s, i_d, d_s, d_d = mixed_edge_stream(
+        jax.random.PRNGKey(2), sz["windows"] + 1, sz["batch_edges"],
+        sz["del_edges"], sz["log2_n"])
+    wkeys = jax.random.split(jax.random.PRNGKey(3), sz["windows"] + 1)
+
+    # compile pass: every query kind, batched + singleton buckets, live +
+    # pinned, and the one-batch stream window
+    warm = svc.pin()
+    for snap in (None, warm):
+        for fn in query_fns(svc, sz, rng)(snap).values():
+            fn()
+    svc.ppr_row(0)
+    svc.next_vertices([0], [0], [0])
+    svc.walks_of([0], capacity=sz["capacity"])
+    svc.neighborhoods([0], hops=2)
+    svc.embedding_neighbors([0], k=8)
+    eng.run_stream(wkeys[-1], i_s[-1:], i_d[-1:], d_s[-1:], d_d[-1:])
+    warm.release()
+
+    # ---- pinned vs live latency under the stream
+    snap = svc.pin()
+    before = pinned_answers(svc, snap, sz)
+    fns = query_fns(svc, sz, rng)
+    lat = {view: {k: [] for k in fns(None)} for view in ("live", "pinned")}
+    for w in range(sz["windows"]):
+        eng.run_stream(wkeys[w], i_s[w:w + 1], i_d[w:w + 1],
+                       d_s[w:w + 1], d_d[w:w + 1])
+        jax.block_until_ready(eng.store.code)
+        for view, snap_arg in (("live", None), ("pinned", snap)):
+            for kind, fn in fns(snap_arg).items():
+                for _ in range(sz["reps"]):
+                    t0 = time.perf_counter()
+                    fn()
+                    lat[view][kind].append(1e6 * (time.perf_counter() - t0))
+    assert not eng.mav_overflowed, "MAV overflow — resize mav_capacity"
+
+    under_stream = {}
+    for view, kinds in lat.items():
+        under_stream[view] = {}
+        for kind, us in kinds.items():
+            p50, p99 = np.percentile(us, 50), np.percentile(us, 99)
+            under_stream[view][kind] = {
+                "p50_us": float(p50), "p99_us": float(p99),
+                "n_samples": len(us), "batch": sz["q_batch"],
+            }
+            emit(f"serve/{view}/{kind}", p50, f"p99={p99:.1f}us")
+
+    # ---- pin bit-identity across the whole stream + a donated window
+    after = pinned_answers(svc, snap, sz)
+    assert before["walks_of"] == after["walks_of"]
+    bit_identical = (
+        before["walks_of"] == after["walks_of"]
+        and np.array_equal(before["neighborhoods"], after["neighborhoods"])
+        and np.array_equal(before["ppr"], after["ppr"]))
+    assert bit_identical, "pinned snapshot drifted under the stream"
+    epoch_pinned, epoch_live = snap.epoch, eng.epoch_counter
+    snap.release()
+    # donation resumes: one more (donated) window, live reads still serve
+    eng.run_stream(wkeys[-1], i_s[-1:], i_d[-1:], d_s[-1:], d_d[-1:])
+    jax.block_until_ready(np.asarray(svc.ppr_row(1)))
+
+    # ---- batched vs per-call (cache-warm, fixed epoch)
+    vs = rng.integers(0, n, size=sz["q_batch"]).astype(np.uint32)
+    percall = {}
+    fns_fixed = {
+        "next_vertices": (
+            lambda ids: svc.next_vertices(
+                ids, np.zeros_like(ids), np.zeros_like(ids))[0]),
+        "walks_of": lambda ids: svc.walks_of(ids, capacity=sz["capacity"]),
+        "neighborhoods": lambda ids: svc.neighborhoods(ids, hops=2),
+        "ppr_rows": lambda ids: svc.ppr_rows(ids),
+        "embedding_neighbors": (
+            lambda ids: svc.embedding_neighbors(ids, k=8)[0]),
+    }
+    for kind, fn in fns_fixed.items():
+        jax.block_until_ready(fn(vs))            # warm batched bucket
+        jax.block_until_ready(fn(vs[:1]))        # warm singleton bucket
+        t_b = common.timeit(lambda: jax.block_until_ready(fn(vs)))
+        t_s = common.timeit(lambda: [jax.block_until_ready(fn(v[None]))
+                                     for v in vs])
+        b_us = 1e6 * t_b / sz["q_batch"]
+        s_us = 1e6 * t_s / sz["q_batch"]
+        percall[kind] = {
+            "batched_us_per_query": b_us,
+            "percall_us_per_query": s_us,
+            "speedup": s_us / max(b_us, 1e-9),
+        }
+        emit(f"serve/batched/{kind}", b_us,
+             f"percall={s_us:.1f}us;speedup={s_us / max(b_us, 1e-9):.1f}x")
+
+    common.record_counters("serve", dict(svc.obs_counters()))
+    write_json("BENCH_SERVE.json", {
+        "config": dict(sz, n_vertices=n, emb_dim=EMB_DIM),
+        "under_stream": under_stream,
+        "batched_vs_percall": percall,
+        "pin": {
+            "bit_identical_after_stream": bool(bit_identical),
+            "epoch_pinned": int(epoch_pinned),
+            "epoch_live_at_check": int(epoch_live),
+        },
+    })
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="quick mode: shrunken stream/queries "
+                         "(results land in BENCH_SERVE.smoke.json)")
+    args = ap.parse_args()
+    if args.smoke:
+        common.SMOKE = True
+    print("name,us_per_call,derived")
+    run()

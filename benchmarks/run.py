@@ -28,6 +28,7 @@ MODULES = [
     "bench_kernels",      # kernel micro-benches
     "bench_downstream",   # Fig 13 + Fig 1
     "bench_freshness",    # §7.6 closed loop: co-scheduled maintainer
+    "bench_serve",        # §11 serving frontend under a live stream
 ]
 
 

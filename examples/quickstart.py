@@ -56,11 +56,30 @@ nxt, found = engine.store.find_next(v, w, p)
 print(f"find_next(v={int(v)}, w=7, p=3) -> {int(nxt[0])} "
       f"(found={bool(found[0])}, matches walk: {int(walks[7][4])})")
 
-# 6. the downstream loop (DESIGN.md §7): stream MORE edges while maintaining
+# 6. serve a BATCHED query mix from a pinned snapshot while the stream
+# keeps writing (DESIGN.md §11): `pin()` stamps the current epoch and keeps
+# its buffers out of donation, so the same answers come back bit-identical
+# across subsequent run_stream windows — the live view moves on
+from repro.serve.walk_queries import WalkQueryService
+
+service = WalkQueryService(engine=engine)
+probes = [7, 21, 99]
+with service.pin() as snap:
+    pinned_before = service.ppr_rows(probes, snapshot=snap)
+    stream_src, stream_dst = edge_batch_stream(jax.random.fold_in(key, 300),
+                                               4, 200, LOG2_N)
+    engine.run_stream(jax.random.fold_in(key, 301), stream_src, stream_dst)
+    pinned_after = service.ppr_rows(probes, snapshot=snap)
+    stable = bool(jnp.array_equal(pinned_before, pinned_after))
+    nb = service.neighborhoods(probes, hops=2, snapshot=snap)
+print(f"pinned query batch over 4 stream windows: bit-identical={stable}; "
+      f"neighborhoods {nb.shape}; live epoch {engine.epoch_counter} "
+      f"vs pinned {snap.epoch}")
+
+# 7. the downstream loop (DESIGN.md §7): stream MORE edges while maintaining
 # SGNS embeddings in the same jitted scan — each step retrains only the
 # affected walks' windows — and watch a nearest-neighbor query move
 from repro.downstream import EmbeddingMaintainer, MaintainerConfig
-from repro.serve.walk_queries import WalkQueryService
 
 # lr note (DESIGN.md §7): nearly every walk is affected per batch here, so
 # the SUM-loss accumulation wants a small step (0.01 diverges in this regime)

@@ -61,6 +61,16 @@ class WharfStreamConfig:
     # engine HLO untouched; ON carries a StreamMetrics pytree through the
     # stream scans (engine outputs stay bit-identical)
     metrics: bool = False
+    # serving frontend (repro/serve, DESIGN.md §11): query-batch bucket of
+    # the jitted multi-query kernels, walks-of per-vertex capacity, the
+    # maintained embedding dim + top-k of `embedding_neighbors`, and how
+    # many epochs of derived read products (walk matrices, PPR tables) the
+    # serving caches keep live for pinned readers
+    serve_batch: int = 16
+    serve_walks_capacity: int = 1024
+    serve_emb_dim: int = 64
+    serve_topk: int = 10
+    serve_cache_epochs: int = 4
 
     def walk_config(self) -> WalkConfig:
         return WalkConfig(n_walks_per_vertex=self.n_walks_per_vertex,
@@ -122,7 +132,9 @@ def _wharf(smoke: bool = False) -> WharfStreamConfig:
     if smoke:
         return WharfStreamConfig(n_vertices=64, edge_capacity=4096,
                                  n_walks_per_vertex=2, length=8,
-                                 batch_edges=16, rewalk_capacity=128)
+                                 batch_edges=16, rewalk_capacity=128,
+                                 serve_batch=8, serve_walks_capacity=128,
+                                 serve_emb_dim=16)
     return WharfStreamConfig()
 
 
@@ -180,6 +192,14 @@ WHARF_SHAPES = {
                                       merge_policy="on-demand", order=2,
                                       sampler="factorized",
                                       megakernel="pallas"),
+    # serving frontend (repro/serve, DESIGN.md §11): the batched multi-
+    # query read step as ONE compiled dispatch over a replicated serving
+    # view — mergeless Overlay build + FINDNEXT point lookups + walks-of
+    # decode + walk-matrix neighborhoods + embedding top-k; reads only,
+    # nothing donated. Two buckets: the default QPS batch and a wide one.
+    "serve_batched_q16": dict(kind="walk_serve", batch_edges=0, q_batch=16),
+    "serve_batched_q256": dict(kind="walk_serve", batch_edges=0,
+                               q_batch=256),
 }
 
 register(ArchSpec(name="wharf-stream", family="wharf", make_config=_wharf,

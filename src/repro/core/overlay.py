@@ -71,6 +71,21 @@ class Overlay(NamedTuple):
     def n_pending_entries(self) -> int:
         return self.skey.shape[0]
 
+    def copy_pending(self) -> "Overlay":
+        """Same view with the pending index arrays in FRESH device buffers.
+
+        The copy-on-pin half of the serving pin contract (DESIGN.md §11):
+        the per-batch update driver donates the pending accumulator, so a
+        pinned reader must own its O(|pending|) index copies. The base store
+        is shared, not copied — keeping its O(T) buffers alive is the
+        refcount half (WalkEngine.pin_buffers suppresses stream donation
+        while pins are outstanding)."""
+        cp = jnp.copy
+        return self._replace(skey=cp(self.skey), scode=cp(self.scode),
+                             sowner=cp(self.sowner), okey=cp(self.okey),
+                             ocode=cp(self.ocode), oepoch=cp(self.oepoch),
+                             oslot=cp(self.oslot))
+
     # ------------------------------------------------------------- traversal
 
     def _pending_next(self, v, w64, p64):

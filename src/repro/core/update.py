@@ -154,18 +154,28 @@ class WalkEngine:
                  rewalk_capacity: int = 1024, max_pending: int = 8,
                  mav_capacity: Optional[int] = None,
                  merge_impl: str = "interleave",
-                 pending: Optional[PendingBlocks] = None, n_pending: int = 0):
+                 pending: Optional[PendingBlocks] = None, n_pending: int = 0,
+                 epoch: int = 0):
         self.cfg = cfg
         self.merge_policy = merge_policy    # "on-demand" | "eager"
         self.rewalk_capacity = rewalk_capacity  # max affected walks per batch
         self.max_pending = max_pending      # version blocks before forced merge
         self.mav_capacity = mav_capacity    # gathered-triplet bound (None = T)
         self.merge_impl = merge_impl        # "interleave" (O(T)) | "lexsort"
+        # `epoch` resumes the monotone update counter when the store was
+        # produced mid-stream elsewhere (e.g. `distr.sharded.unshard_state`):
+        # its entries carry their original epochs, and a restarted counter
+        # would lose every slot-epoch liveness race to them
         self.state = EngineState.create(graph, store, max_pending,
                                         rewalk_capacity * cfg.length,
-                                        pending=pending, n_pending=n_pending)
+                                        pending=pending, n_pending=n_pending,
+                                        epoch=epoch)
         self._n_pending_host = int(n_pending)
-        self._epoch_host = 0
+        self._epoch_host = int(epoch)
+        # outstanding read pins (serve/snapshots.py): while nonzero,
+        # run_stream switches to its non-donating entry so pinned base-store
+        # buffers survive the stream (DESIGN.md §11)
+        self._pins = 0
         # cfg.metrics: StreamMetrics accumulated across run_stream calls
         # (device-resident; export via repro.obs.export.summary)
         if cfg is not None and cfg.metrics:
@@ -218,6 +228,26 @@ class WalkEngine:
         (tests/benchmarks enforce)."""
         return bool(self.state.overflow)
 
+    # ----------------------------------------------------------- pin registry
+
+    @property
+    def pins_active(self) -> int:
+        """Outstanding snapshot pins (serve/snapshots.py)."""
+        return self._pins
+
+    def pin_buffers(self) -> None:
+        """Register a read pin: until the matching `unpin_buffers`, stream
+        drivers run NON-donating so the current base-store buffers survive
+        (the refcount half of the pin contract; the pending index copy is
+        the other half — `Overlay.copy_pending`)."""
+        self._pins += 1
+
+    def unpin_buffers(self) -> None:
+        """Release one read pin; donation resumes at refcount zero."""
+        if self._pins <= 0:
+            raise RuntimeError("unpin_buffers without a matching pin")
+        self._pins -= 1
+
     # ------------------------------------------------------------------ API
 
     def insert_edges(self, key, src, dst):
@@ -264,8 +294,10 @@ class WalkEngine:
         `lax.cond` — the same `stream_step` the per-batch driver runs, so
         the resulting store is bit-identical (tests/test_stream.py). The
         carried state is donated: prior references to this engine's buffers
-        (snapshots, overlays) are invalidated — `materialize` a snapshot
-        first if it must outlive the stream.
+        (snapshots, overlays) are invalidated — unless a read pin is
+        outstanding (`pin_buffers` / serve `pin()`), which switches this
+        call to the non-donating entry so pinned snapshots stay valid;
+        `materialize` remains the heavyweight alternative.
 
         `key` is split into one PRNG key per batch. Deletion streams are
         optional ([n_batches, d]; zero-width allowed). Returns the per-batch
@@ -292,8 +324,13 @@ class WalkEngine:
             del_dst = jnp.asarray(del_dst, U32)
         keys = jax.random.split(key, n_batches)
 
+        # outstanding read pins suppress donation (pin contract, §11): the
+        # pinned snapshots keep serving the pre-stream buffers bit-identically
+        pinned = self._pins > 0
         if self.cfg.metrics:
-            self.state, self.metrics, out = _run_stream_obs_jit(
+            entry = (_run_stream_obs_jit_nodonate if pinned
+                     else _run_stream_obs_jit)
+            self.state, self.metrics, out = entry(
                 self.state, self.metrics, keys, ins_src, ins_dst, del_src,
                 del_dst, cfg=self.cfg, capacity=self.rewalk_capacity,
                 mav_capacity=self._mav_capacity(),
@@ -301,7 +338,8 @@ class WalkEngine:
                 merge_policy=self.merge_policy, merge_impl=self.merge_impl,
                 with_masks=return_masks)
         else:
-            self.state, out = _run_stream_jit(
+            entry = _run_stream_jit_nodonate if pinned else _run_stream_jit
+            self.state, out = entry(
                 self.state, keys, ins_src, ins_dst, del_src, del_dst,
                 cfg=self.cfg, capacity=self.rewalk_capacity,
                 mav_capacity=self._mav_capacity(),
@@ -587,22 +625,18 @@ def _update_jit(graph, store, pending, n_pending, epoch, total_affected,
     return state
 
 
-@partial(jax.jit,
-         static_argnames=("cfg", "capacity", "mav_capacity", "max_pending",
-                          "merge_policy", "merge_impl", "with_masks"),
-         donate_argnums=(0,))
-def _run_stream_jit(state: EngineState, keys, ins_src, ins_dst, del_src,
-                    del_dst, cfg: WalkConfig, capacity: int,
-                    mav_capacity: int, max_pending: int, merge_policy: str,
-                    merge_impl: str, with_masks: bool = False):
+def _run_stream_body(state: EngineState, keys, ins_src, ins_dst, del_src,
+                     del_dst, cfg: WalkConfig, capacity: int,
+                     mav_capacity: int, max_pending: int, merge_policy: str,
+                     merge_impl: str, with_masks: bool = False):
     """The scan-pipelined driver: n_batches updates, zero host round-trips.
 
-    The whole EngineState is donated (in-place buffer reuse across the
-    stream); overflow/affected ride the carry as device scalars. With
-    `with_masks` the scan also emits each step's UpdateAux — the per-step
-    affected-walk sets (not just the end-of-stream scalar), stacked to
-    [n_batches, capacity], for consumers that retrain on exactly the walks
-    each batch touched."""
+    The whole EngineState is donated in the default `_run_stream_jit` entry
+    (in-place buffer reuse across the stream); overflow/affected ride the
+    carry as device scalars. With `with_masks` the scan also emits each
+    step's UpdateAux — the per-step affected-walk sets (not just the
+    end-of-stream scalar), stacked to [n_batches, capacity], for consumers
+    that retrain on exactly the walks each batch touched."""
 
     def body(s, xs):
         k, i_s, i_d, d_s, d_d = xs
@@ -616,16 +650,25 @@ def _run_stream_jit(state: EngineState, keys, ins_src, ins_dst, del_src,
                                       del_dst))
 
 
-@partial(jax.jit,
-         static_argnames=("cfg", "capacity", "mav_capacity", "max_pending",
-                          "merge_policy", "merge_impl", "with_masks"),
-         donate_argnums=(0, 1))
-def _run_stream_obs_jit(state: EngineState, metrics, keys, ins_src, ins_dst,
-                        del_src, del_dst, cfg: WalkConfig, capacity: int,
-                        mav_capacity: int, max_pending: int,
-                        merge_policy: str, merge_impl: str,
-                        with_masks: bool = False):
-    """`_run_stream_jit` with a StreamMetrics pytree riding the scan carry.
+_STREAM_STATICS = ("cfg", "capacity", "mav_capacity", "max_pending",
+                   "merge_policy", "merge_impl", "with_masks")
+
+_run_stream_jit = jax.jit(_run_stream_body, static_argnames=_STREAM_STATICS,
+                          donate_argnums=(0,))
+# the pinned-reader variant (DESIGN.md §11): identical scan, NO donation —
+# the pre-stream base-store buffers stay alive for outstanding snapshot
+# pins. Selected by WalkEngine.run_stream while `pin_buffers` holds a
+# nonzero refcount; costs one extra state allocation per stream call.
+_run_stream_jit_nodonate = jax.jit(_run_stream_body,
+                                   static_argnames=_STREAM_STATICS)
+
+
+def _run_stream_obs_body(state: EngineState, metrics, keys, ins_src,
+                         ins_dst, del_src, del_dst, cfg: WalkConfig,
+                         capacity: int, mav_capacity: int, max_pending: int,
+                         merge_policy: str, merge_impl: str,
+                         with_masks: bool = False):
+    """`_run_stream_body` with a StreamMetrics pytree riding the scan carry.
 
     A SEPARATE jit entry (not a flag on `_run_stream_jit`) so the OFF path
     keeps its exact pre-observability trace; the metrics pytree is donated
@@ -644,6 +687,16 @@ def _run_stream_obs_jit(state: EngineState, metrics, keys, ins_src, ins_dst,
     (state, metrics), out = jax.lax.scan(
         body, (state, metrics), (keys, ins_src, ins_dst, del_src, del_dst))
     return state, metrics, out
+
+
+_run_stream_obs_jit = jax.jit(_run_stream_obs_body,
+                              static_argnames=_STREAM_STATICS,
+                              donate_argnums=(0, 1))
+# pinned-reader variant: engine state NOT donated; the metrics pytree holds
+# no reader-visible buffers, so it keeps its donation either way.
+_run_stream_obs_jit_nodonate = jax.jit(_run_stream_obs_body,
+                                       static_argnames=_STREAM_STATICS,
+                                       donate_argnums=(1,))
 
 
 class VersionBlock(NamedTuple):

@@ -613,6 +613,56 @@ def _wharf_plan(arch, cfg, info, mesh, shape_name) -> CellPlan:
                         args, in_sh, out_sh, flops_batch * n_batches,
                         donate_argnums=(0,))
 
+    if info["kind"] == "walk_serve":
+        # §11 serving frontend: the batched multi-query read step — the
+        # cache-miss (post-update first-query) dispatch, self-contained:
+        # mergeless Overlay build over base + pending, FINDNEXT point
+        # lookups, walks-of segment decode, walk-matrix traversal +
+        # neighborhood gather, and embedding top-k, all in one compiled
+        # call over a REPLICATED serving view (read replicas; nothing
+        # donated — the cell-level form of the serve pin contract)
+        from repro.core.overlay import Overlay
+        from repro.core.store import WalkStore
+        from repro.core.update import PendingBlocks
+        from repro.serve import batched as sb
+
+        qb = info.get("q_batch", cfg.serve_batch)
+        hops = info.get("hops", 2)
+        wcap = info.get("walks_capacity", cfg.serve_walks_capacity)
+        ent = cfg.rewalk_capacity * cfg.length
+        n_w = cfg.n_walks_per_vertex
+
+        store_t = WalkStore(**store, length=cfg.length,
+                            n_walks=cfg.n_vertices * n_w,
+                            n_vertices=cfg.n_vertices, chunk_b=cfg.chunk_b)
+        pending_t = PendingBlocks(
+            owner=S((cfg.max_pending, ent), U32),
+            code=S((cfg.max_pending, ent), U64),
+            epoch=S((cfg.max_pending, ent), U32),
+            slot=S((cfg.max_pending, ent), I32))
+
+        def serve_step(store_s, pending_s, emb, v, w, p):
+            ov = Overlay.build(store_s, pending_s)
+            nxt, found = ov.find_next(v, w, p)
+            wof = sb.walks_of_batch(ov, jnp.asarray(v, I32), capacity=wcap)
+            wm = sb.walk_matrix_all(ov, n_w=n_w)
+            nb = sb.neighborhoods_from_matrix(wm, jnp.asarray(v, I32),
+                                              n_w=n_w, hops=hops)
+            ids, sc = sb.embedding_topk(emb, jnp.asarray(v, I32),
+                                        k=cfg.serve_topk)
+            return nxt, found, wof, nb, ids, sc
+
+        args = (store_t, pending_t,
+                S((cfg.n_vertices, cfg.serve_emb_dim), jnp.float32),
+                S((qb,), U32), S((qb,), U32), S((qb,), U32))
+        repl = NamedSharding(mesh, P())
+        # traversal dominates compute; the top-k matmul dominates per-query
+        serve_flops = (cfg.n_vertices * n_w * cfg.length * 100.0
+                       + qb * cfg.n_vertices * cfg.serve_emb_dim * 2.0)
+        return CellPlan(arch, shape_name, "walk_serve_step", serve_step,
+                        args, (repl,) * len(args), repl, serve_flops,
+                        donate_argnums=())
+
     if info["kind"] == "walk_stream":
         n_batches = info.get("n_batches", cfg.stream_batches)
         merge_policy = info.get("merge_policy", "on-demand")

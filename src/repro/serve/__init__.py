@@ -1,0 +1,19 @@
+"""Serving frontend: batched queries over live walk corpora (DESIGN.md §11).
+
+Four layers over a `WalkEngine`:
+
+  * serve/walk_queries.py — `WalkQueryService`, the batched multi-query
+    engine (FINDNEXT point lookups, walks-of, neighborhoods, PPR rows,
+    embedding neighbors) with frontend input validation.
+  * serve/batched.py — the module-level jitted, shape-bucketed query
+    kernels the service dispatches to.
+  * serve/cache.py — `EpochCache`, the epoch-keyed LRU every derived read
+    product (overlay, walk matrix, PPR tables, normalized embeddings)
+    rides.
+  * serve/snapshots.py — `PinnedSnapshot`: epoch-stamped views that serve
+    bit-identical answers across subsequent donated `run_stream` calls
+    (copy-on-pin of pending indexes + refcounted donation suppression).
+"""
+from repro.serve.cache import EpochCache  # noqa: F401
+from repro.serve.snapshots import PinnedSnapshot, pin_snapshot  # noqa: F401
+from repro.serve.walk_queries import WalkQueryService  # noqa: F401

@@ -1,0 +1,165 @@
+"""Jitted, shape-bucketed batched query kernels (the multi-query engine).
+
+Each serving query kind is ONE pure function over the overlay/store pytree,
+jitted at module level — the read-path twin of the PR-2 write-path rebuild:
+instead of a 10-dispatch chain of jnp ops per call (the pre-§11 service),
+a request batch costs one compiled dispatch, and jax.jit's shape-keyed
+cache replaces per-call tracing. Ragged request sizes are rounded up to
+power-of-two buckets (`pad_ids`) so a live QPS mix hits a handful of
+compiled entries instead of retracing per batch size; results are sliced
+back to the true batch length by the caller (serve/walk_queries.py).
+
+FINDNEXT backends are resolved BEFORE the jit boundary (the service passes
+the concrete backend string as a static arg), so a later registry change
+retraces instead of serving a stale trace.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import packed_store, pairing
+from repro.core.corpus import walk_start_vertex
+from repro.core.overlay import Overlay
+from repro.core.packed_store import CHUNK
+from repro.core.ppr import ppr_scores
+
+U32 = jnp.uint32
+I32 = jnp.int32
+
+# smallest request bucket: sub-8 batches share one compiled entry
+BUCKET_MIN = 8
+
+
+def bucket_size(n: int) -> int:
+    """Round a request batch length up to the next power-of-two bucket."""
+    if n <= BUCKET_MIN:
+        return BUCKET_MIN
+    return 1 << (n - 1).bit_length()
+
+
+def pad_ids(arr, fill=0):
+    """Pad a 1-D query array to its bucket: returns (padded, true_len).
+
+    Pad lanes carry `fill` (a valid in-range id, so the padded lanes trace
+    the same gather paths) and are sliced off by the caller."""
+    arr = jnp.atleast_1d(arr)
+    n = arr.shape[0]
+    b = bucket_size(n)
+    if b == n:
+        return arr, n
+    return jnp.concatenate(
+        [arr, jnp.full((b - n,), fill, arr.dtype)]), n
+
+
+# ------------------------------------------------------------- query kernels
+
+
+@partial(jax.jit, static_argnames=("backend", "window"))
+def find_next_batch(ov: Overlay, v, w, p, backend=None, window=None):
+    """Batched FINDNEXT over base + pending: (v_next u32[B], found bool[B])."""
+    return ov.find_next(v, w, p, backend=backend, window=window)
+
+
+@partial(jax.jit, static_argnames=("capacity",))
+def walks_of_batch(ov: Overlay, vertices, capacity: int):
+    """Walk ids visiting each vertex: int32 [B, 2*capacity], -1 padded.
+
+    Reads the vertex's walk-tree segment bounds (offsets) and decodes the
+    covering FOR bit-packed chunks — the indexed access the paper contrasts
+    with II scans, served from the compressed representation. Mergeless:
+    stale base entries (slot rewritten by a pending version) are masked by
+    the slot-epoch liveness check, and the live pending entries of each
+    vertex are appended from the overlay's owner-sorted index, so the union
+    equals the post-merge segment exactly.
+    """
+    store = ov.base
+    pv = store.packed_view()
+    vertices = jnp.asarray(vertices, I32)
+    starts = store.offsets[vertices]
+    lens = store.offsets[vertices + 1] - starts
+    # chunks covering [start, start + capacity) for every queried vertex
+    kc = -(-capacity // CHUNK) + 1
+    c0 = starts // CHUNK
+    cidx = jnp.clip(c0[:, None] + jnp.arange(kc, dtype=I32)[None],
+                    0, pv.n_chunks - 1)
+    codes = packed_store.gather_decode(
+        pv.packed, pv.widths, pv.anchors_hi, pv.anchors_lo, cidx
+    ).reshape(vertices.shape[0], kc * CHUNK)
+    rel = (starts - c0 * CHUNK)[:, None] + jnp.arange(capacity,
+                                                      dtype=I32)[None]
+    seg_codes = jnp.take_along_axis(codes, rel, axis=1)
+    valid = jnp.arange(capacity, dtype=I32)[None] < lens[:, None]
+    f, _ = pairing.szudzik_unpair(seg_codes)
+    # slot-epoch liveness: mask base entries superseded by pending blocks
+    abs_idx = jnp.clip(starts[:, None]
+                       + jnp.arange(capacity, dtype=I32)[None],
+                       0, store.size - 1)
+    slot = jnp.clip(f, 0, store.n_walks * store.length - 1).astype(I32)
+    live = store.epoch[abs_idx] == store.slot_epoch[slot]
+    w = (f // jnp.uint64(store.length)).astype(I32)
+    base_w = jnp.where(valid & live, w, -1)
+    pend_w = ov.pending_walks_of(vertices, capacity)
+    return jnp.concatenate([base_w, pend_w], axis=1)
+
+
+@partial(jax.jit, static_argnames=("n_w", "backend"))
+def walk_matrix_all(ov: Overlay, n_w: int, backend=None):
+    """The full [n_walks, l] corpus via overlay traversal, one dispatch.
+
+    The per-epoch product every matrix-backed read (neighborhoods, PPR)
+    shares through the epoch cache."""
+    store = ov.base
+    w = jnp.arange(store.n_walks, dtype=U32)
+    start = walk_start_vertex(w, n_w)
+    return ov.traverse(w, start, store.length - 1, backend=backend)
+
+
+@partial(jax.jit, static_argnames=("n_w", "hops"))
+def neighborhoods_from_matrix(wm, seeds, n_w: int, hops: int):
+    """[B, n_w, hops+1] seed neighborhoods as a pure gather from the cached
+    walk matrix (walks of v are ids v*n_w .. v*n_w + n_w - 1 by corpus
+    construction) — bit-identical to traversing the seeds' walks, because
+    the cached matrix IS the overlay traversal of every walk."""
+    seeds = jnp.asarray(seeds, I32)
+    b = seeds.shape[0]
+    walk_ids = seeds[:, None] * n_w + jnp.arange(n_w, dtype=I32)[None]
+    return wm[walk_ids.reshape(-1), : hops + 1].reshape(b, n_w, hops + 1)
+
+
+@partial(jax.jit, static_argnames=("n_vertices", "restart_prob"))
+def ppr_table(wm, n_vertices: int, restart_prob: float):
+    """Full [n, n] PPR score table from the walk matrix (cached per
+    (epoch, restart_prob) — the satellite-1 fix: computed once, then every
+    `ppr_rows` query is a row gather)."""
+    return ppr_scores(wm, n_vertices, restart_prob)
+
+
+@jax.jit
+def gather_rows(table, idx):
+    """Row gather: the per-query cost of a cache-warm PPR read."""
+    return table[jnp.asarray(idx, I32)]
+
+
+@jax.jit
+def normalize_rows(table):
+    """L2-normalize embedding rows once per install (the emb-norm cache
+    value); each query is then a plain matmul + top-k."""
+    table = jnp.asarray(table, jnp.float32)
+    norm = jnp.maximum(jnp.linalg.norm(table, axis=1, keepdims=True), 1e-6)
+    return table / norm
+
+
+@partial(jax.jit, static_argnames=("k",))
+def embedding_topk(normed, vertices, k: int):
+    """Cosine top-k over the normalized table, query vertices excluded:
+    (ids int32 [B, k], scores f32 [B, k])."""
+    vertices = jnp.asarray(vertices, I32)
+    q = normed[vertices]                                  # [B, d]
+    scores = q @ normed.T                                 # [B, n]
+    scores = scores.at[jnp.arange(vertices.shape[0]), vertices].set(
+        -jnp.inf)
+    top, ids = jax.lax.top_k(scores, k)
+    return ids.astype(I32), top

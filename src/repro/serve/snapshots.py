@@ -1,0 +1,77 @@
+"""Pinned read snapshots: epoch-stamped views that survive donated streams.
+
+The hazard this fixes (the old `snapshot()` docstring admitted it): the
+scan-pipelined `run_stream` DONATES the whole engine state, so an overlay
+handed to a reader dies the moment the writer streams the next window —
+use-after-donate. The pin contract (DESIGN.md §11) keeps snapshots free
+while making them durable, in two halves:
+
+  * **copy-on-pin** — the pin owns fresh copies of the O(|pending|) overlay
+    index arrays (`Overlay.copy_pending`), so the per-batch driver's
+    pending-buffer donation can never invalidate a pinned read;
+  * **refcounted release** — the pin registers with the engine
+    (`WalkEngine.pin_buffers`), which switches `run_stream` to its
+    non-donating entry while any pin is outstanding: the O(T) base-store
+    buffers stay alive WITHOUT being copied. Releasing the last pin
+    resumes donation.
+
+A pinned snapshot therefore serves bit-identical pre-update answers after
+any number of subsequent `run_stream` calls (tests/test_serve.py), at the
+cost of one pending-index copy up front plus one extra state allocation
+per stream call while pinned. Release promptly; `with service.pin() as
+snap:` scopes it."""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from repro.core.overlay import Overlay
+
+
+@dataclass
+class PinnedSnapshot:
+    """A consistent, epoch-stamped read view pinned against donation.
+
+    `overlay` shares the base store (refcount-protected) and owns copied
+    pending indexes; `epoch`/`n_pending` stamp the engine state it was
+    built from — `epoch` keys every derived-read cache (walk matrix, PPR
+    tables), so two pins of the same epoch share cached products."""
+
+    overlay: Overlay
+    epoch: int
+    n_pending: int
+    _engine: object = field(repr=False, default=None)
+    _released: bool = field(default=False, repr=False)
+
+    @property
+    def released(self) -> bool:
+        return self._released
+
+    def release(self) -> None:
+        """Drop the pin (idempotent): decrements the engine's pin refcount;
+        once the last pin is gone, stream donation resumes and this
+        snapshot must not be read again."""
+        if not self._released:
+            self._released = True
+            if self._engine is not None:
+                self._engine.unpin_buffers()
+
+    def check_live(self) -> None:
+        if self._released:
+            raise ValueError(
+                "pinned snapshot was released — its buffers may have been "
+                "donated by a subsequent stream; pin() a fresh one")
+
+    def __enter__(self) -> "PinnedSnapshot":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.release()
+
+
+def pin_snapshot(engine, overlay: Overlay, epoch: int,
+                 n_pending: int) -> PinnedSnapshot:
+    """Build a pin from the service's current overlay: copy the pending
+    indexes, take the engine refcount (released via `PinnedSnapshot`)."""
+    engine.pin_buffers()
+    return PinnedSnapshot(overlay=overlay.copy_pending(), epoch=epoch,
+                          n_pending=n_pending, _engine=engine)

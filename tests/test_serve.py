@@ -2,6 +2,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.core import StreamingGraph, WalkConfig, generate_corpus
 from repro.core.update import WalkEngine
@@ -11,12 +12,13 @@ from repro.serve.walk_queries import WalkQueryService
 U32 = jnp.uint32
 
 
-def make_service(seed=0):
+def make_service(seed=0, merge_policy="on-demand"):
     src, dst = rmat_edges(jax.random.PRNGKey(seed), 300, 6)
     g = StreamingGraph.from_edges(src, dst, 64, 4096)
     cfg = WalkConfig(n_walks_per_vertex=2, length=8)
     store = generate_corpus(jax.random.PRNGKey(seed + 1), g, cfg)
-    eng = WalkEngine(graph=g, store=store, cfg=cfg, rewalk_capacity=128)
+    eng = WalkEngine(graph=g, store=store, cfg=cfg, rewalk_capacity=128,
+                     merge_policy=merge_policy)
     return WalkQueryService(engine=eng)
 
 
@@ -162,3 +164,294 @@ def test_embedding_neighbors_after_set_embedding_table():
     ids2, scores2 = svc.embedding_neighbors([0], k=1)
     assert int(np.asarray(ids2)[0, 0]) == 1
     assert float(np.asarray(scores2)[0, 0]) > 0.99
+
+# ------------------------------- §11 serving frontend: pins, caches, batching
+
+
+def _answers(svc, snap=None):
+    """One batched query of every kind, as numpy (for bit-equality asserts).
+
+    walks_of is compared as per-row id SETS: the mergeless layout (masked
+    base holes + pending tail) differs positionally from the consolidated
+    post-merge segment while denoting the same walk set — that set equality
+    is the query's contract (test_walks_of_is_exact_inverted_index)."""
+    wm = np.asarray(svc.walk_matrix(snapshot=snap))
+    ws = np.asarray([3, 17, 40])
+    ps = np.asarray([0, 2, 5])
+    nxt, found = svc.next_vertices(wm[ws, ps], ws, ps, snapshot=snap)
+    wof = np.asarray(svc.walks_of([3, 11, 27], capacity=128, snapshot=snap))
+    return {
+        "walk_matrix": wm,
+        "walks_of": [frozenset(int(w) for w in row if w >= 0)
+                     for row in wof],
+        "neighborhoods": np.asarray(svc.neighborhoods([1, 5, 9], hops=2,
+                                                      snapshot=snap)),
+        "ppr": np.asarray(svc.ppr_rows([2, 9, 33], snapshot=snap)),
+        "next": np.asarray(nxt),
+        "found": np.asarray(found),
+    }
+
+
+def _assert_same(a, b):
+    assert a.keys() == b.keys()
+    for k in a:
+        if k == "walks_of":
+            assert a[k] == b[k], k
+        else:
+            np.testing.assert_array_equal(a[k], b[k], err_msg=k)
+
+
+@pytest.mark.parametrize("policy", ["on-demand", "eager"])
+def test_pinned_snapshot_survives_donated_stream(policy):
+    """The §11 pin contract: answers served from a pinned snapshot stay
+    bit-identical across subsequent donated `run_stream` calls, and equal
+    the post-merge answers of the state at pin time."""
+    from repro.data.streams import mixed_edge_stream
+
+    svc = make_service(seed=3, merge_policy=policy)
+    # leave pending blocks at pin time (on-demand): the pin must copy them
+    i0, d0, x0, y0 = mixed_edge_stream(jax.random.PRNGKey(40), 2, 12, 4, 6)
+    for i in range(2):
+        svc.engine.update_batch(jax.random.PRNGKey(41 + i), i0[i], d0[i],
+                                x0[i], y0[i])
+    # post-merge reference: an identically-driven twin, merged now
+    twin = make_service(seed=3, merge_policy=policy)
+    for i in range(2):
+        twin.engine.update_batch(jax.random.PRNGKey(41 + i), i0[i], d0[i],
+                                 x0[i], y0[i])
+    twin.engine.merge()
+    ref = _answers(twin)
+
+    snap = svc.pin()
+    assert svc.engine.pins_active == 1
+    pre = _answers(svc, snap=snap)
+    _assert_same(pre, ref)                 # mergeless pin == post-merge
+
+    # live stream continues: two donated run_stream windows
+    i_s, i_d, d_s, d_d = mixed_edge_stream(jax.random.PRNGKey(50), 4, 16,
+                                           4, 6)
+    svc.engine.run_stream(jax.random.PRNGKey(51), i_s[:2], i_d[:2],
+                          d_s[:2], d_d[:2])
+    mid = _answers(svc, snap=snap)         # mid-stream pinned reads
+    svc.engine.run_stream(jax.random.PRNGKey(52), i_s[2:], i_d[2:],
+                          d_s[2:], d_d[2:])
+    post = _answers(svc, snap=snap)
+    _assert_same(mid, pre)
+    _assert_same(post, pre)
+    assert svc.engine.epoch_counter == snap.epoch + 4  # live view advanced
+
+    # live queries still work mid-pin and see the new epoch
+    live = svc.walks_of([3, 11, 27], capacity=128)
+    assert live.shape == (3, 256)
+
+    snap.release()
+    assert svc.engine.pins_active == 0
+    with pytest.raises(ValueError):
+        svc.walks_of([3], capacity=64, snapshot=snap)
+    # donation resumes cleanly after release
+    svc.engine.run_stream(jax.random.PRNGKey(53), i_s[:2], i_d[:2],
+                          d_s[:2], d_d[:2])
+    assert svc.ppr_row(9).shape == (64,)
+
+
+def test_pin_refcount_and_context_manager():
+    svc = make_service()
+    with svc.pin() as a:
+        b = svc.pin()
+        assert svc.engine.pins_active == 2
+        b.release()
+        b.release()                        # idempotent
+        assert svc.engine.pins_active == 1
+        assert not a.released
+    assert a.released and svc.engine.pins_active == 0
+    with pytest.raises(RuntimeError):
+        svc.engine.unpin_buffers()
+    c = svc.obs_counters()
+    assert c["pins_total"] == 2 and c["pins_active"] == 0
+
+
+def test_ppr_scores_cached_per_epoch_and_restart():
+    """Satellite fix: the full PPR table is computed once per
+    (epoch, restart_prob) — repeat rows are cache hits, not recomputes."""
+    svc = make_service()
+    r1 = np.asarray(svc.ppr_row(7))
+    c = svc.obs_counters()
+    assert c["ppr_table_cache_miss"] == 1 and c["ppr_table_cache_hit"] == 0
+    r1b = np.asarray(svc.ppr_row(7))
+    r2 = np.asarray(svc.ppr_row(9))
+    c = svc.obs_counters()
+    assert c["ppr_table_cache_miss"] == 1 and c["ppr_table_cache_hit"] == 2
+    np.testing.assert_array_equal(r1, r1b)
+    # a different restart probability is a different table
+    svc.ppr_row(7, restart_prob=0.5)
+    assert svc.obs_counters()["ppr_table_cache_miss"] == 2
+    # an update (epoch bump) invalidates; a merge does not
+    isrc, idst = rmat_edges(jax.random.PRNGKey(9), 8, 6)
+    svc.engine.insert_edges(jax.random.PRNGKey(10), isrc, idst)
+    svc.ppr_row(7)
+    assert svc.obs_counters()["ppr_table_cache_miss"] == 3
+    svc.engine.merge()
+    svc.ppr_row(7)
+    assert svc.obs_counters()["ppr_table_cache_miss"] == 3
+    np.testing.assert_array_equal(r2, np.asarray(r2))
+
+
+def test_overlay_cache_rekeyed_on_epoch_and_pending():
+    """Satellite fix: the snapshot cache keys on (epoch, n_pending) — the
+    content key — not state object identity, so a no-op state replacement
+    does not rebuild and pinned readers are not tied to dead objects."""
+    svc = make_service()
+    ov1 = svc.snapshot()
+    assert svc.snapshot() is ov1
+    svc.engine.state = svc.engine.state.replace()   # new object, same content
+    assert svc.snapshot() is ov1                    # old identity key rebuilt
+    assert svc.obs_counters()["overlay_rebuilds"] == 1
+    isrc, idst = rmat_edges(jax.random.PRNGKey(9), 8, 6)
+    svc.engine.insert_edges(jax.random.PRNGKey(10), isrc, idst)
+    ov2 = svc.snapshot()                            # epoch bump -> rebuild
+    assert ov2 is not ov1
+    svc.engine.merge()
+    ov3 = svc.snapshot()                            # pending drained -> rebuild
+    assert ov3 is not ov2
+    assert svc.obs_counters()["overlay_rebuilds"] == 3
+
+
+def test_batched_equals_per_call_with_odd_batch():
+    """Bucket padding correctness: an odd-size batch (padded to the next
+    power-of-two bucket) answers exactly like per-item singleton calls."""
+    svc = make_service()
+    vs = [3, 11, 27, 40, 63]                        # 5 -> bucket 8
+    batch = np.asarray(svc.walks_of(vs, capacity=64))
+    for i, v in enumerate(vs):
+        np.testing.assert_array_equal(
+            batch[i], np.asarray(svc.walks_of([v], capacity=64))[0])
+    nb = np.asarray(svc.neighborhoods(vs, hops=3))
+    for i, v in enumerate(vs):
+        np.testing.assert_array_equal(
+            nb[i], np.asarray(svc.neighborhoods([v], hops=3))[0])
+    pr = np.asarray(svc.ppr_rows(vs))
+    for i, v in enumerate(vs):
+        np.testing.assert_array_equal(pr[i], np.asarray(svc.ppr_row(v)))
+    table = np.asarray(jax.random.normal(jax.random.PRNGKey(0), (64, 16)))
+    svc.set_embedding_table(jnp.asarray(table))
+    ids, sc = svc.embedding_neighbors(vs, k=3)
+    for i, v in enumerate(vs):
+        i1, s1 = svc.embedding_neighbors([v], k=3)
+        np.testing.assert_array_equal(np.asarray(ids)[i], np.asarray(i1)[0])
+        np.testing.assert_array_equal(np.asarray(sc)[i], np.asarray(s1)[0])
+
+
+def test_input_validation_errors():
+    """Frontend validation: out-of-range ids and over-wide top-k raise
+    ValueError instead of silently clamping inside the jnp gathers."""
+    from repro.serve.cache import EpochCache
+
+    svc = make_service()
+    n = svc.engine.store.n_vertices
+    with pytest.raises(ValueError, match="ppr"):
+        svc.ppr_row(n)
+    with pytest.raises(ValueError, match="ppr"):
+        svc.ppr_rows([0, -1])
+    with pytest.raises(ValueError, match="restart_prob"):
+        svc.ppr_row(0, restart_prob=1.5)
+    with pytest.raises(ValueError, match="walks_of"):
+        svc.walks_of([n + 3], capacity=64)
+    with pytest.raises(ValueError, match="seed"):
+        svc.neighborhoods([n], hops=2)
+    with pytest.raises(ValueError, match="hops"):
+        svc.neighborhoods([0], hops=0)
+    with pytest.raises(ValueError, match="hops"):
+        svc.neighborhoods([0], hops=svc.engine.store.length)
+    svc.set_embedding_table(
+        jax.random.normal(jax.random.PRNGKey(0), (n, 8)))
+    with pytest.raises(ValueError, match="k must be"):
+        svc.embedding_neighbors([0], k=n)       # would die inside top_k
+    with pytest.raises(ValueError, match="k must be"):
+        svc.embedding_neighbors([0], k=0)
+    with pytest.raises(ValueError, match="embedding"):
+        svc.embedding_neighbors([n - 1, n], k=2)
+    with pytest.raises(ValueError, match="max_entries"):
+        EpochCache("bad", max_entries=0)
+
+
+def test_pinned_serving_8shard_stream():
+    """8-shard: pinned batched reads stay bit-identical while the sharded
+    stream continues (donating its stacked state) AND while the serving
+    replica applies the same window through its own donated run_stream;
+    afterwards replica and shards still agree bit-for-bit."""
+    from test_distr import run_sub
+    run_sub("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core import StreamingGraph, generate_corpus
+        from repro.core.corpus import WalkConfig, walk_start_vertex
+        from repro.core.update import WalkEngine
+        from repro.data.streams import mixed_edge_stream, rmat_edges
+        from repro.distr.sharded import (ShardSpec, shard_state,
+                                         sharded_run_stream, unshard_state)
+        from repro.serve.walk_queries import WalkQueryService
+
+        n, ecap, cap = 64, 4096, 128
+        cfg = WalkConfig(n_walks_per_vertex=2, length=8, megakernel="off")
+        src, dst = rmat_edges(jax.random.PRNGKey(0), 200, 6)
+        graph = StreamingGraph.from_edges(src, dst, n, ecap)
+        store = generate_corpus(jax.random.PRNGKey(1), graph, cfg)
+        i_s, i_d, d_s, d_d = mixed_edge_stream(
+            jax.random.PRNGKey(2), 6, 16, 4, 6)
+        key = jax.random.PRNGKey(3)
+        spec = ShardSpec(n_shards=8, n_vertices=n, edge_capacity=1024,
+                         store_capacity=512, mav_capacity=512, slab=cap)
+
+        for policy in ("on-demand", "eager"):
+            # window A runs sharded; the serving replica is its unshard
+            stacked = shard_state(jax.tree.map(jnp.array, graph),
+                                  jax.tree.map(jnp.array, store), spec,
+                                  cap, max_pending=4)
+            stacked, _ = sharded_run_stream(
+                stacked, key, i_s[:3], i_d[:3], d_s[:3], d_d[:3], cfg=cfg,
+                spec=spec, capacity=cap, max_pending=4, merge_policy=policy)
+            g1, s1, ovf = unshard_state(stacked, ecap)
+            assert not ovf
+            # epoch=3 resumes the counter: the unsharded store's entries
+            # keep their window-A epochs, and a restarted counter would
+            # lose every slot-epoch liveness race to them
+            eng = WalkEngine(graph=g1, store=s1, cfg=cfg, merge_policy=policy,
+                             rewalk_capacity=cap, max_pending=4, epoch=3)
+            svc = WalkQueryService(engine=eng)
+
+            def answers(snap):
+                return {
+                  "w": np.asarray(svc.walks_of([3, 11, 27], capacity=cap,
+                                               snapshot=snap)),
+                  "nb": np.asarray(svc.neighborhoods([1, 5, 9], hops=2,
+                                                     snapshot=snap)),
+                  "p": np.asarray(svc.ppr_rows([2, 9, 33], snapshot=snap)),
+                }
+
+            snap = svc.pin()
+            pre = answers(snap)
+
+            # window B: sharded stream AND the replica's own donated stream
+            stacked, aff_sh = sharded_run_stream(
+                stacked, key, i_s[3:], i_d[3:], d_s[3:], d_d[3:], cfg=cfg,
+                spec=spec, capacity=cap, max_pending=4, merge_policy=policy)
+            aff = eng.run_stream(key, i_s[3:], i_d[3:], d_s[3:], d_d[3:])
+
+            mid = answers(snap)                   # pinned reads mid-stream
+            for k in pre:
+                assert np.array_equal(pre[k], mid[k]), (policy, k)
+            assert np.array_equal(np.asarray(aff), np.asarray(aff_sh))
+
+            # replica (served concurrently) still bit-equal to the shards
+            eng.merge()
+            g2, s2, ovf = unshard_state(stacked, ecap)
+            assert not ovf
+            assert np.array_equal(np.asarray(eng.graph.codes),
+                                  np.asarray(g2.codes)), policy
+            for f in ("owner", "code", "epoch", "slot_epoch"):
+                assert np.array_equal(np.asarray(getattr(eng.store, f)),
+                                      np.asarray(getattr(s2, f))), \\
+                    (policy, f)
+            snap.release()
+            print("OK", policy)
+        print("OK 8-shard pinned serving")
+    """)
