@@ -12,6 +12,11 @@ The headline numbers land in BENCH_FRESHNESS.json:
     (the §7.6 efficiency claim: freshness at a fraction of the work)
   * quality_gap — full-retrain accuracy minus incremental accuracy
     (tests/test_downstream.py enforces the documented tolerance)
+  * freshness_lag — per-snapshot walk-lag / stale-fraction / divergence
+    cells from the maintainer's staleness counters (obs/staleness.py,
+    DESIGN.md §12): the walk-freshness axis the accuracy cells move along;
+    the full cumulative counters land under "counters" in both modes
+    (the --smoke CI step records them too)
 
 The SAME stacked edge stream object drives the maintainer AND (recorded for
 the apples-to-apples contract) the II baseline via its `run_stream`."""
@@ -33,6 +38,7 @@ import numpy as np
 
 from benchmarks import common
 from benchmarks.common import emit, write_json
+from repro.obs import export
 from repro.core import StreamingGraph, WalkConfig, generate_corpus
 from repro.core.baselines import IIEngine
 from repro.data.streams import cora_like
@@ -84,9 +90,11 @@ def run():
     # hundred vertices, the SUM-loss scatter accumulation needs a smaller
     # step than sparse-stream regimes (0.01 drifts the warm start apart
     # here; 0.002 tracks the full-retrain quality — see BENCH_FRESHNESS)
-    mcfg = MaintainerConfig(walk=wcfg, n_vertices=n, dim=DIM, window=WINDOW,
-                            n_negative=N_NEG, rewalk_capacity=n * sz["n_w"],
-                            lr=0.002)
+    # metrics ON (bit-identical contract) so the staleness counters ride
+    # the same maintainer scan — the freshness-lag axis of this bench
+    mcfg = MaintainerConfig(walk=wcfg._replace(metrics=True), n_vertices=n,
+                            dim=DIM, window=WINDOW, n_negative=N_NEG,
+                            rewalk_capacity=n * sz["n_w"], lr=0.002)
     mt = EmbeddingMaintainer(graph=g, store=store, cfg=mcfg,
                              key=jax.random.PRNGKey(2))
 
@@ -126,6 +134,9 @@ def run():
                                  labels_np)
 
         ratio = pairs_inc / max(pairs_full, 1)
+        # cumulative staleness snapshot (obs counters accumulate across
+        # run_stream calls): the freshness-lag axis at this point in time
+        stale = export.summary(mt.metrics)["staleness"]
         snaps.append(dict(
             snapshot=snap,
             acc_incremental=acc_inc, acc_full=acc_full,
@@ -134,11 +145,19 @@ def run():
             pairs_ratio=ratio,
             affected_wharf=int(np.asarray(m.n_affected).sum()),
             affected_ii=int(np.asarray(ii_aff).sum()),
+            freshness_lag=dict(
+                lag_mean=stale["lag_mean"], lag_max=stale["lag_max"],
+                stale_fraction=stale["stale_fraction"],
+                divergence_rate=stale["audit"]["divergence_rate"]),
         ))
         emit(f"freshness/snap{snap}", 0.0,
              f"inc={acc_inc:.3f};full={acc_full:.3f};static={acc_static:.3f};"
-             f"pairs_ratio={ratio:.3f}")
+             f"pairs_ratio={ratio:.3f};lag_mean={stale['lag_mean']:.3f};"
+             f"stale_frac={stale['stale_fraction']:.4f}")
     assert not mt.mav_overflowed, "MAV overflow — resize mav_capacity"
+    # full staleness/stream counters -> the "counters" key of the payload
+    # (recorded in --smoke too: the CI freshness-smoke step's new cells)
+    common.record_counters("freshness", mt.metrics)
 
     gaps = [s["acc_full"] - s["acc_incremental"] for s in snaps]
     payload = {

@@ -18,6 +18,12 @@ The headline numbers land in BENCH_SERVE.json:
   * pin — bit-identity proof: answers captured from the pin before the
     stream equal the re-queried answers after every window (including a
     donated post-release `run_stream`, whose live reads then diverge).
+  * slo — the obs/slo.py collector's view of the same run: per-kind
+    p50/p95/p99 from the serve phase spans (log2-bucket upper bounds, so
+    values are coarser than the wall percentiles above — by design),
+    split live/pinned x batched/per-call, plus QPS and burn rates against
+    the declared targets below. Installed AFTER the compile pass: the SLO
+    cells describe steady-state serving, not tracing.
 """
 from __future__ import annotations
 
@@ -41,9 +47,25 @@ from benchmarks.common import emit, write_json
 from repro.core import StreamingGraph, WalkConfig, generate_corpus
 from repro.core.update import WalkEngine
 from repro.data.streams import mixed_edge_stream, rmat_edges
+from repro.obs import slo
 from repro.serve.walk_queries import WalkQueryService
 
 EMB_DIM = 32
+
+# declared serving targets (DESIGN.md §12): matrix-backed kinds absorb the
+# per-epoch cache rebuild on the live view, so their budget is wider than
+# the point-lookup kinds. Burn rates land in BENCH_SERVE.json as info-only
+# cells (wall-clock-derived; the sentinel never gates them).
+SLO_TARGETS = {
+    "serve/next_vertices": slo.SLOTarget(latency_us=50_000, objective=0.95),
+    "serve/walks_of": slo.SLOTarget(latency_us=50_000, objective=0.95),
+    "serve/embedding_neighbors": slo.SLOTarget(latency_us=50_000,
+                                               objective=0.95),
+    "serve/neighborhoods": slo.SLOTarget(latency_us=250_000, objective=0.95),
+    # the span name is serve/ppr_row for both the batched and singleton
+    # forms (the row-gather span; the table build is serve/ppr_table)
+    "serve/ppr_row": slo.SLOTarget(latency_us=250_000, objective=0.95),
+}
 
 
 def sizes():
@@ -140,6 +162,20 @@ def run():
     eng.run_stream(wkeys[-1], i_s[-1:], i_d[-1:], d_s[-1:], d_d[-1:])
     warm.release()
 
+    # SLO collector installed AFTER the compile pass: the histograms
+    # describe steady-state serving (every serve/* phase span from here on
+    # — the measured loops below plus the pin probes — flows in)
+    collector = slo.install(slo.ServeSLO(targets=SLO_TARGETS))
+    try:
+        _measured(svc, eng, sz, rng, collector,
+                  (i_s, i_d, d_s, d_d), wkeys, n)
+    finally:
+        slo.uninstall()
+
+
+def _measured(svc, eng, sz, rng, collector, stream, wkeys, n):
+    i_s, i_d, d_s, d_d = stream
+
     # ---- pinned vs live latency under the stream
     snap = svc.pin()
     before = pinned_answers(svc, snap, sz)
@@ -211,6 +247,12 @@ def run():
         emit(f"serve/batched/{kind}", b_us,
              f"percall={s_us:.1f}us;speedup={s_us / max(b_us, 1e-9):.1f}x")
 
+    sl = collector.summary()
+    for kind, cell in sorted(sl["kinds"].items()):
+        emit(f"serve/slo/{kind.removeprefix('serve/')}", cell["p50_us"],
+             f"p95={cell['p95_us']:.0f}us;p99={cell['p99_us']:.0f}us;"
+             f"burn={sl['burn_rates'].get(kind, 0.0):.2f}")
+
     common.record_counters("serve", dict(svc.obs_counters()))
     write_json("BENCH_SERVE.json", {
         "config": dict(sz, n_vertices=n, emb_dim=EMB_DIM),
@@ -221,6 +263,7 @@ def run():
             "epoch_pinned": int(epoch_pinned),
             "epoch_live_at_check": int(epoch_live),
         },
+        "slo": sl,
     })
 
 

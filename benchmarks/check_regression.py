@@ -1,0 +1,124 @@
+"""Bench regression sentinel CLI (DESIGN.md §12).
+
+Diffs freshly produced BENCH_*.json cells against the committed baselines
+under per-cell noise thresholds (repro.obs.regress) and writes a
+machine-readable verdict; exit code 1 on a gating regression so CI fails.
+
+  # after running the smoke benches (benchmarks/run.py --smoke + friends):
+  python benchmarks/check_regression.py --smoke
+
+Baselines live in `benchmarks/baselines/` (committed — the repo-root
+`*.smoke.json` artifacts are gitignored, so the baseline copies are the
+cross-PR memory). Regenerate them by re-running the smoke benches and
+copying the fresh files over (`--update-baselines` does both halves of
+the copy) — a PR that legitimately moves gated cells must ship the new
+baselines, which is exactly the review surface the sentinel wants.
+Threshold overrides: `benchmarks/regression_thresholds.json`.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import shutil
+import sys
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for _p in (_ROOT, os.path.join(_ROOT, "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
+
+from repro.obs import regress  # noqa: E402
+
+BASELINE_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                            "baselines")
+THRESHOLDS = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                          "regression_thresholds.json")
+
+# the recorded-result files both CI bench jobs produce
+BENCH_FILES = ("BENCH_MEMORY", "BENCH_SEARCH", "BENCH_THROUGHPUT",
+               "BENCH_FRESHNESS", "BENCH_SERVE", "BENCH_SCALING")
+
+
+def bench_name(stem: str, smoke: bool) -> str:
+    return f"{stem}.smoke.json" if smoke else f"{stem}.json"
+
+
+def run_check(smoke: bool, baseline_dir: str = BASELINE_DIR,
+              thresholds: str = THRESHOLDS, fresh_dir: str = _ROOT,
+              out: str = None, update_baselines: bool = False) -> int:
+    """Compare fresh BENCH files against baselines; write the verdict.
+    Returns the intended process exit code (0 pass / 1 fail)."""
+    rules = (regress.load_rules(thresholds) if os.path.exists(thresholds)
+             else regress.DEFAULT_RULES)
+    verdict = regress.Verdict(mode="smoke" if smoke else "full")
+    for stem in BENCH_FILES:
+        name = bench_name(stem, smoke)
+        fresh_path = os.path.join(fresh_dir, name)
+        base_path = os.path.join(baseline_dir, name)
+        if not os.path.exists(fresh_path):
+            verdict.add(stem, {"verdict": "pass", "skipped": "no fresh run"})
+            continue
+        if update_baselines:
+            os.makedirs(baseline_dir, exist_ok=True)
+            shutil.copyfile(fresh_path, base_path)
+            verdict.add(stem, {"verdict": "pass",
+                               "skipped": "baseline updated"})
+            continue
+        if not os.path.exists(base_path):
+            verdict.add(stem, {"verdict": "pass",
+                               "skipped": "no committed baseline"})
+            continue
+        with open(fresh_path) as f:
+            fresh = json.load(f)
+        with open(base_path) as f:
+            base = json.load(f)
+        verdict.add(stem, regress.compare(base, fresh, rules))
+
+    payload = verdict.to_json()
+    if out is None:
+        out = os.path.join(
+            fresh_dir, "bench_regression.smoke.json" if smoke
+            else "bench_regression.json")
+    with open(out, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+
+    for stem, fv in payload["files"].items():
+        tag = fv.get("skipped")
+        if tag:
+            print(f"# {stem}: skipped ({tag})")
+            continue
+        c = fv["counts"]
+        print(f"# {stem}: {fv['verdict']} "
+              f"({c['pass']} pass, {c['fail']} fail, {c['info']} info, "
+              f"{c['new']} new, {c['missing']} missing)")
+        for cell in fv["cells"]:
+            if cell["status"] in ("fail", "info"):
+                print(f"#   {cell['status'].upper():4s} {cell['path']}: "
+                      f"{cell.get('baseline')} -> {cell.get('current')} "
+                      f"(rel {cell.get('rel_delta', 'n/a')})")
+    print(f"# regression verdict: {payload['verdict']} -> {out}")
+    return 1 if payload["verdict"] == "fail" else 0
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="compare BENCH_*.smoke.json (the CI smoke cells)")
+    ap.add_argument("--baseline-dir", default=BASELINE_DIR)
+    ap.add_argument("--thresholds", default=THRESHOLDS)
+    ap.add_argument("--out", default=None,
+                    help="verdict JSON path (default "
+                         "bench_regression[.smoke].json at the repo root)")
+    ap.add_argument("--update-baselines", action="store_true",
+                    help="copy the fresh BENCH files over the baselines "
+                         "instead of comparing (commit the result)")
+    args = ap.parse_args()
+    sys.exit(run_check(args.smoke, baseline_dir=args.baseline_dir,
+                       thresholds=args.thresholds, out=args.out,
+                       update_baselines=args.update_baselines))
+
+
+if __name__ == "__main__":
+    main()

@@ -45,11 +45,21 @@ def main() -> None:
     ap.add_argument("--smoke", action="store_true",
                     help="quick mode: shrunken workloads, core modules only "
                          "(the CI benchmark smoke job)")
+    ap.add_argument("--check-regressions", action="store_true",
+                    help="after the selected modules finish, diff the "
+                         "recorded BENCH_*.json cells against the committed "
+                         "benchmarks/baselines/ under the sentinel "
+                         "thresholds (fails on a gating regression)")
+    ap.add_argument("--skip-benches", action="store_true",
+                    help="run no bench modules (with --check-regressions: "
+                         "sentinel-only over already-produced BENCH files)")
     args = ap.parse_args()
 
     if args.smoke:
         common.SMOKE = True
-    if args.only is not None:
+    if args.skip_benches:
+        mods = []
+    elif args.only is not None:
         # --only selects from the full module list (combined with --smoke it
         # runs that one module with shrunken workloads)
         mods = [m for m in MODULES if m == args.only]
@@ -70,14 +80,19 @@ def main() -> None:
             failures.append((name, repr(e)))
             traceback.print_exc()
         print(f"# {name} done in {time.time() - t0:.1f}s", flush=True)
-    with open(args.out, "w") as f:
-        f.write("name,us_per_call,derived\n")
-        f.write("\n".join(common.ROWS) + "\n")
-    print(f"# {len(common.ROWS)} rows -> {args.out}; {len(failures)} failures")
+    if not args.skip_benches:
+        with open(args.out, "w") as f:
+            f.write("name,us_per_call,derived\n")
+            f.write("\n".join(common.ROWS) + "\n")
+        print(f"# {len(common.ROWS)} rows -> {args.out}; "
+              f"{len(failures)} failures")
     for n, e in failures:
         print(f"# FAILED {n}: {e}")
     if failures:
         sys.exit(1)
+    if args.check_regressions:
+        from benchmarks import check_regression
+        sys.exit(check_regression.run_check(args.smoke))
 
 
 if __name__ == "__main__":

@@ -83,10 +83,20 @@ from repro.downstream import EmbeddingMaintainer, MaintainerConfig
 
 # lr note (DESIGN.md §7): nearly every walk is affected per batch here, so
 # the SUM-loss accumulation wants a small step (0.01 diverges in this regime)
-mcfg = MaintainerConfig(walk=cfg, n_vertices=N_VERTICES, dim=32, window=3,
+# metrics=True turns on the scan-carried stream counters AND the walk-
+# freshness auditor (DESIGN.md §12) — engine outputs stay bit-identical
+mcfg = MaintainerConfig(walk=cfg._replace(metrics=True),
+                        n_vertices=N_VERTICES, dim=32, window=3,
                         rewalk_capacity=4096, lr=0.0005)
+# handoff contract for a mid-stream store (DESIGN.md §12): merge() first
+# (unmerged pending rewrites live outside the base store — dropping them
+# leaves their slots unreadable) and resume the epoch counter (a restarted
+# counter loses every slot-epoch precedence race). The §12 divergence
+# auditor catches both misses as invalid transitions.
+engine.merge()
 maintainer = EmbeddingMaintainer(graph=engine.graph, store=engine.store,
-                                 cfg=mcfg, key=jax.random.PRNGKey(5))
+                                 cfg=mcfg, key=jax.random.PRNGKey(5),
+                                 epoch=engine.epoch_counter)
 service = WalkQueryService(engine=maintainer.engine_view())
 probe = int(walks[7][0])
 service.set_embedding_table(maintainer.embeddings)
@@ -105,3 +115,17 @@ after_ids, _ = service.embedding_neighbors(probe, k=5)
 print(f"nearest neighbors of v={probe}: "
       f"before {[int(i) for i in before_ids[0]]} -> "
       f"after {[int(i) for i in after_ids[0]]}")
+
+# 8. how fresh are the walks the embeddings just trained on? The staleness
+# counters rode the same scan (DESIGN.md §12): per-walk lag = stream
+# batches since the walk was last rewritten; the divergence auditor replays
+# sampled walks against the live graph (invalid transitions must be 0 on a
+# maintained engine)
+from repro.obs import export
+
+stale = export.summary(maintainer.metrics)["staleness"]
+print(f"freshness after the stream: lag mean {stale['lag_mean']:.2f} "
+      f"batches (max {stale['lag_max']}), "
+      f"stale fraction {stale['stale_fraction']:.4f}; "
+      f"auditor: {stale['audit']['invalid']}/{stale['audit']['transitions']} "
+      f"invalid transitions (divergence {stale['audit']['divergence_rate']})")

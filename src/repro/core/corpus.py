@@ -38,6 +38,12 @@ class WalkConfig(NamedTuple):
     # called — and ON only READS the engine carry, so engine outputs stay
     # bit-identical (tests/test_obs.py).
     metrics: bool = False
+    # walks replayed per step by the freshness divergence auditor
+    # (obs/staleness.py, DESIGN.md §12). Only read when `metrics=True` on a
+    # single-host driver; static, so 0 compiles the auditor out of the ON
+    # path too. The sample key is folded off the step key — no engine draw
+    # is consumed, bit-identity holds.
+    audit_k: int = 4
 
 
 def walk_start_vertex(w, n_w: int):

@@ -587,7 +587,8 @@ def stream_step_aux(state: EngineState, key, ins_src, ins_dst, del_src,
         metrics = record_engine_step(metrics, state, aux,
                                      state.n_pending - 1, forced,
                                      overflow_before, cfg,
-                                     eager=merge_policy == "eager")
+                                     eager=merge_policy == "eager",
+                                     key=key)
     if merge_policy == "eager":
         state = merge(state)
     if metrics is not None:

@@ -129,9 +129,11 @@ def init_params(key, n_vertices: int, dim: int):
 
 
 def init_maintainer(key, graph: StreamingGraph, store: WalkStore,
-                    cfg: MaintainerConfig) -> MaintainerState:
+                    cfg: MaintainerConfig,
+                    epoch: int = 0) -> MaintainerState:
     engine = EngineState.create(graph, store, cfg.max_pending,
-                                cfg.rewalk_capacity * cfg.walk.length)
+                                cfg.rewalk_capacity * cfg.walk.length,
+                                epoch=epoch)
     return MaintainerState(
         engine=engine,
         params=init_params(key, cfg.n_vertices, cfg.dim),
@@ -283,14 +285,20 @@ class EmbeddingMaintainer:
     bit-for-bit; training randomness comes from an independent key."""
 
     def __init__(self, graph: StreamingGraph = None, store: WalkStore = None,
-                 cfg: MaintainerConfig = None, key=None):
+                 cfg: MaintainerConfig = None, key=None, epoch: int = 0):
         if cfg.mav_capacity == 0:
             cfg = cfg.replace(mav_capacity=store.size)
         self.cfg = cfg
         key = jax.random.PRNGKey(0) if key is None else key
-        self.state = init_maintainer(key, graph, store, cfg)
+        # `epoch` resumes the monotone update counter when the store was
+        # produced mid-stream by another engine (same contract as
+        # WalkEngine): its slots carry their original epoch stamps, and a
+        # restarted counter loses every slot-epoch precedence race — new
+        # rewalks get dropped on merge and walks stitch across epoch
+        # domains (the obs/staleness.py divergence auditor catches this)
+        self.state = init_maintainer(key, graph, store, cfg, epoch=epoch)
         self._n_pending_host = 0
-        self._epoch_host = 0
+        self._epoch_host = int(epoch)
         # cfg.walk.metrics: engine-side StreamMetrics accumulated across
         # run_stream calls, same contract as WalkEngine.metrics
         if cfg.walk.metrics:

@@ -1,16 +1,30 @@
-"""Device-resident stream telemetry (DESIGN.md §10).
+"""Device-resident stream telemetry (DESIGN.md §10, semantic layer §12).
 
-Three layers, strictly additive to the engine:
+Layers, strictly additive to the engine:
 
   * obs/metrics.py — `StreamMetrics`, a registered-dataclass pytree of
     device counters carried through the jitted stream scans (single-host
     `run_stream`, sharded `sharded_run_stream`, the downstream maintainer)
     with zero mid-stream host round-trips. OFF by default
     (`WalkConfig.metrics`): the untracked drivers' HLO is unchanged.
+  * obs/staleness.py — walk-freshness counters nested inside StreamMetrics:
+    per-walk epoch-lag histogram, stale-walk fraction, and the K-sample
+    divergence auditor replaying walks against the live overlay.
   * obs/trace.py — host-side phase spans (`jax.profiler.TraceAnnotation` +
-    `jax.named_scope`) and a Chrome-trace-compatible JSONL span log.
-  * obs/export.py — stable JSON summaries and Prometheus-style text from a
-    finished `StreamMetrics`.
+    `jax.named_scope`) and a Chrome-trace-compatible JSONL span log, with
+    pluggable span observers.
+  * obs/slo.py — serve-side SLO layer fed by the trace observers:
+    log-bucketed latency histograms per query kind x view x mode, QPS,
+    validation-error counters, burn-rate evaluation against declared
+    targets.
+  * obs/export.py — stable JSON summaries (schema v2, append-only) and
+    Prometheus-style text from a finished `StreamMetrics` (+ optional
+    serve counters and SLO summary).
+  * obs/regress.py — the bench regression sentinel: diffs BENCH_*.json
+    cells against committed baselines under per-cell noise thresholds
+    (CLI: benchmarks/check_regression.py).
 """
 from repro.obs.metrics import (NEVER, OVERFLOW_SOURCES,  # noqa: F401
                                PMIN_BUCKETS, StreamMetrics, combine_shards)
+from repro.obs.staleness import (LAG_BUCKETS, LAG_THRESHOLDS,  # noqa: F401
+                                 STALE_LAG, StalenessMetrics)

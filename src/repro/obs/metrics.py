@@ -44,6 +44,11 @@ Counter semantics (what the paper's rate claims need):
     gather, handoff slab) tripped; `NEVER` if it never did. The engine's
     own `overflow` flag stays the single OR as before — this only records
     which capacity to resize.
+  * ``staleness`` — nested `obs.staleness.StalenessMetrics`: the per-walk
+    epoch-lag histogram, stale-walk fraction, and the K-sample divergence
+    auditor (single-host drivers thread the step key in; the sharded
+    driver records lag only — slot_epoch is replicated, the auditor is
+    not shardable without a traversal collective).
 
 Cross-shard counters are per-shard partial sums; `combine_shards` reduces a
 [S, ...]-stacked metrics pytree (replicated counters take shard 0, handoff
@@ -56,6 +61,8 @@ from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp
+
+from repro.obs.staleness import StalenessMetrics, record_audit, record_lag
 
 I32 = jnp.int32
 U32 = jnp.uint32
@@ -83,6 +90,7 @@ class StreamMetrics:
     handoff_cross: jax.Array        # i32 [] lanes leaving this shard
     handoff_max_load: jax.Array     # i32 [] max lanes to one dest per step
     overflow_first_epoch: jax.Array  # u32 [4] first-trip epoch per source
+    staleness: StalenessMetrics     # nested walk-freshness counters (§12)
 
     def replace(self, **kw) -> "StreamMetrics":
         return dataclasses.replace(self, **kw)
@@ -100,7 +108,8 @@ class StreamMetrics:
             deg_fallback_lanes=z(), handoff_sent=z(), handoff_cross=z(),
             handoff_max_load=z(),
             overflow_first_epoch=jnp.full((len(OVERFLOW_SOURCES),), NEVER,
-                                          U32))
+                                          U32),
+            staleness=StalenessMetrics.empty())
 
 
 def pmin_bucket_counts(p_min, lane_valid, length: int):
@@ -146,13 +155,17 @@ def record_overflow(m: StreamMetrics, source: int, tripped, epoch
 
 
 def record_engine_step(m: StreamMetrics, state, aux, block_row, forced_merge,
-                       overflow_before, cfg, eager: bool) -> StreamMetrics:
+                       overflow_before, cfg, eager: bool,
+                       key=None) -> StreamMetrics:
     """Fold one single-host `stream_step` into the counters.
 
     Called between the Algorithm-2 apply and any eager merge (so the
     just-appended version block at `block_row` is still in the pending
     buffer); `state` is the post-apply engine carry, `aux` its UpdateAux.
-    The only single-host deferred-overflow source is the MAV gather."""
+    The only single-host deferred-overflow source is the MAV gather.
+    `key` is the STEP key (already consumed by the rewalk): the divergence
+    auditor folds an independent sample stream off it, so passing it keeps
+    engine outputs bit-identical; `key=None` skips the auditor."""
     with jax.named_scope("obs_metrics"):
         length = state.store.length
         owner = jax.lax.dynamic_index_in_dim(state.pending.owner, block_row,
@@ -161,6 +174,9 @@ def record_engine_step(m: StreamMetrics, state, aux, block_row, forced_merge,
                                                  block_row, 0,
                                                  keepdims=False)
         one = jnp.asarray(1, I32)
+        st = record_lag(m.staleness, state)
+        if key is not None:
+            st = record_audit(st, state, key, cfg)
         m = m.replace(
             n_steps=m.n_steps + one,
             affected_total=m.affected_total + state.last_affected,
@@ -171,7 +187,8 @@ def record_engine_step(m: StreamMetrics, state, aux, block_row, forced_merge,
             merges_forced=m.merges_forced + forced_merge.astype(I32),
             merges_eager=m.merges_eager + (one if eager else 0),
             deg_fallback_lanes=m.deg_fallback_lanes + deg_fallback_count(
-                state.graph, owner, epoch_col, length, cfg.model))
+                state.graph, owner, epoch_col, length, cfg.model),
+            staleness=st)
     return record_overflow(m, OVF_MAV, state.overflow & ~overflow_before,
                            state.epoch)
 
@@ -182,10 +199,14 @@ def record_sharded_step(m: StreamMetrics, state, obs: dict, forced_merge,
 
     `obs` is the per-step observation dict `_sharded_apply_update` returns
     with `with_obs=True`: the replicated pmin histogram plus this shard's
-    handoff volumes and per-source overflow flags."""
+    handoff volumes and per-source overflow flags. Walk lag records too
+    (slot_epoch is replicated); the divergence auditor does not — a
+    sharded replay would need a cross-shard traversal collective, so the
+    audit counters stay 0 on sharded runs."""
     with jax.named_scope("obs_metrics"):
         one = jnp.asarray(1, I32)
         m = m.replace(
+            staleness=record_lag(m.staleness, state),
             n_steps=m.n_steps + one,
             affected_total=m.affected_total + state.last_affected,
             affected_max=jnp.maximum(m.affected_max, state.last_affected),

@@ -1,0 +1,176 @@
+"""Walk-freshness metrics: how stale is the maintained corpus right now?
+
+Wharf's pitch is that maintained walks "constantly keep up with the graph
+updates" — PR 8's counters price the maintenance (|MAV|, suffix fractions,
+merges) but never answer the headline question. This module adds the
+semantic layer (DESIGN.md §12), carried through the exact same jit-static
+`WalkConfig.metrics` scan path and under the same hard contract: OFF is
+compiled out entirely (byte-identical pre-observability HLO), ON only
+READS the engine carry and consumes no engine PRNG (bit-identical outputs).
+
+Three signals:
+
+  * **per-walk epoch-lag histogram** — the freshness-lag primitive is
+    `state.epoch - store.slot_epoch[slot]` (both u32, epoch monotone): how
+    many stream batches ago each corpus slot was last (re)written. A walk's
+    lag is the MIN over its slots — every rewalk rewrites the suffix
+    through the terminal slot, so the min is exactly "batches since this
+    walk was last refreshed" (the max would saturate at `epoch`: position-0
+    slots keep their corpus-generation stamp forever). Log2 buckets:
+    bucket 0 = lag 0 (refreshed this batch), bucket b = lag in
+    [2^(b-1), 2^b), last bucket open-ended.
+  * **stale-walk fraction over stream time** — a walk observation counts
+    stale when its lag >= `STALE_LAG`; the fraction is
+    stale_walk_steps / walk_steps (derived at export, so any other
+    threshold on a bucket edge is recoverable from the histogram).
+  * **divergence auditor** — lag measures *recency*, not *validity*: an
+    untouched walk may still be perfectly valid (none of its edges
+    changed). The auditor measures validity directly: each step it draws K
+    walk ids from a key FOLDED OFF the step key (`fold_in` — no engine
+    draw is consumed), replays them against the current mergeless overlay
+    (`Overlay.build(store, pending).traverse`), and counts transitions
+    (u -> x) with no live edge — `has_edge(u, x)` false and not the
+    isolated-vertex self-loop `sample_neighbor` defines (u == x with
+    deg(u) == 0). On a maintained engine the invalid-transition rate is 0
+    by construction (every affected suffix is re-walked in the same epoch
+    that invalidated it — tested); a nonzero rate quantifies maintenance
+    quality loss in a way bit-identity tests cannot (e.g. a future lossy /
+    deferred-maintenance mode).
+
+Sharded (distr/sharded.py): `slot_epoch` and `epoch` are replicated, so
+the lag counters are identical on every shard and `combine_shards` takes
+shard 0 for free. The auditor is single-host only — a sharded replay would
+need a cross-shard traversal collective for walks whose path leaves the
+local vertex range — so sharded audit counters stay 0 (documented).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+I32 = jnp.int32
+U32 = jnp.uint32
+F32 = jnp.float32
+
+LAG_BUCKETS = 8
+# lower bound of bucket b (b >= 1); bucket 0 holds lag == 0 exactly and the
+# last bucket is open-ended. Integer thresholds, so the device bucketing
+# (sum of >= comparisons) and the numpy replay agree exactly.
+LAG_THRESHOLDS = (1, 2, 4, 8, 16, 32, 64)
+assert len(LAG_THRESHOLDS) == LAG_BUCKETS - 1
+
+# a walk observation counts stale when not refreshed for >= STALE_LAG
+# batches (a histogram bucket edge, so other thresholds stay derivable)
+STALE_LAG = 4
+
+# PRNG salt for the auditor's sample key: `fold_in(step_key, AUDIT_SALT)`
+# derives an independent stream without consuming any engine draw — the
+# metrics-ON bit-identity contract depends on this.
+AUDIT_SALT = 0x57A1E
+
+
+@jax.tree_util.register_dataclass
+@dataclass(frozen=True)
+class StalenessMetrics:
+    """Device freshness counters (nested inside `StreamMetrics`)."""
+
+    lag_hist: jax.Array          # i32 [LAG_BUCKETS] walk-lag histogram
+    lag_sum: jax.Array           # f32 [] cumulative walk lag (for the mean)
+    lag_max: jax.Array           # i32 [] max walk lag observed
+    walk_steps: jax.Array        # i32 [] walk observations (steps * n_walks)
+    stale_walk_steps: jax.Array  # i32 [] observations with lag >= STALE_LAG
+    audit_walks: jax.Array       # i32 [] walks replayed by the auditor
+    audit_transitions: jax.Array  # i32 [] transitions checked (walks*(l-1))
+    audit_invalid: jax.Array     # i32 [] transitions with no live edge
+
+    def replace(self, **kw) -> "StalenessMetrics":
+        return dataclasses.replace(self, **kw)
+
+    @staticmethod
+    def empty() -> "StalenessMetrics":
+        # distinct buffers per field: donated alongside the engine carry
+        # (same rule as StreamMetrics.empty)
+        z = lambda: jnp.zeros((), I32)
+        return StalenessMetrics(
+            lag_hist=jnp.zeros((LAG_BUCKETS,), I32),
+            lag_sum=jnp.zeros((), F32), lag_max=z(), walk_steps=z(),
+            stale_walk_steps=z(), audit_walks=z(), audit_transitions=z(),
+            audit_invalid=z())
+
+
+def per_walk_lag(state) -> jax.Array:
+    """u32[n_walks] freshness lag: epochs since each walk was last
+    refreshed (min slot lag — rewalks always rewrite through the terminal
+    slot, so the newest slot stamp IS the walk's last-refresh epoch)."""
+    store = state.store
+    slot_lag = state.epoch - store.slot_epoch  # u32 [n_walks * l]
+    return jnp.min(slot_lag.reshape(store.n_walks, store.length), axis=1)
+
+
+def lag_bucket_counts(lag) -> jax.Array:
+    """i32[LAG_BUCKETS] histogram of walk lags over the log2 buckets."""
+    th = jnp.asarray(LAG_THRESHOLDS, U32)
+    bucket = jnp.sum(lag[:, None] >= th[None, :], axis=1).astype(I32)
+    return jnp.zeros((LAG_BUCKETS,), I32).at[bucket].add(1)
+
+
+def record_lag(st: StalenessMetrics, state) -> StalenessMetrics:
+    """Fold one post-apply engine state's walk-lag snapshot into the
+    counters (runs on every driver, single-host and sharded)."""
+    with jax.named_scope("obs_metrics"):
+        lag = per_walk_lag(state)
+        stale = jnp.asarray(STALE_LAG, U32)
+        return st.replace(
+            lag_hist=st.lag_hist + lag_bucket_counts(lag),
+            lag_sum=st.lag_sum + jnp.sum(lag.astype(F32)),
+            lag_max=jnp.maximum(st.lag_max, jnp.max(lag).astype(I32)),
+            walk_steps=st.walk_steps + jnp.asarray(lag.shape[0], I32),
+            stale_walk_steps=st.stale_walk_steps
+            + jnp.sum(lag >= stale).astype(I32))
+
+
+def audit_invalid_count(key, graph, store, pending, k: int, n_w: int
+                        ) -> jax.Array:
+    """i32 [] invalid transitions among K sampled walks replayed against
+    the current overlay graph (the divergence auditor's inner check —
+    exposed standalone so tests can drive it against a graph the
+    maintenance never saw).
+
+    A transition (u -> x) at a non-terminal position is valid iff the edge
+    (u, x) is live, or it is the isolated-vertex self-loop (u == x with
+    deg(u) == 0) that `sample_neighbor` emits by contract. A find_next
+    miss keeps the traversal at u, yielding u == x — counted invalid
+    whenever u has neighbors it should have sampled."""
+    from repro.core.corpus import walk_start_vertex
+    from repro.core.overlay import Overlay
+    akey = jax.random.fold_in(key, AUDIT_SALT)
+    wids = jax.random.randint(akey, (k,), 0, store.n_walks).astype(U32)
+    ov = Overlay.build(store, pending)
+    path = ov.traverse(wids, walk_start_vertex(wids, n_w),
+                       store.length - 1)  # [k, l]
+    u, x = path[:, :-1], path[:, 1:]
+    deg_u = graph.degree(u.astype(I32))
+    ok = graph.has_edge(u, x) | ((u == x) & (deg_u == 0))
+    return jnp.sum(~ok).astype(I32)
+
+
+def record_audit(st: StalenessMetrics, state, key, cfg) -> StalenessMetrics:
+    """Replay `cfg.audit_k` sampled walks against the live overlay and fold
+    the invalid-transition count (single-host drivers only; `audit_k` is
+    jit-static, 0 compiles the auditor out of the ON path too)."""
+    k = int(cfg.audit_k)
+    if k <= 0:
+        return st
+    with jax.named_scope("obs_metrics"):
+        invalid = audit_invalid_count(key, state.graph, state.store,
+                                      state.pending, k,
+                                      cfg.n_walks_per_vertex)
+        length = state.store.length
+        return st.replace(
+            audit_walks=st.audit_walks + jnp.asarray(k, I32),
+            audit_transitions=st.audit_transitions
+            + jnp.asarray(k * (length - 1), I32),
+            audit_invalid=st.audit_invalid + invalid)

@@ -79,6 +79,26 @@ class TraceLog:
 
 _LOG: Optional[TraceLog] = None
 
+# span observers: callables (name, cat, dur_us, args, error) notified on
+# every phase() exit (whether or not a TraceLog is installed) — the hook
+# obs/slo.py rides to build latency histograms without touching the query
+# code. `error` is the exception instance if the span body raised, else
+# None. Observers must not raise on the serving hot path; exceptions are
+# deliberately NOT swallowed here (an observer bug should fail tests, not
+# silently drop telemetry).
+_OBSERVERS: list = []
+
+
+def add_observer(fn) -> None:
+    """Register a span observer `(name, cat, dur_us, args, error)`."""
+    if fn not in _OBSERVERS:
+        _OBSERVERS.append(fn)
+
+
+def remove_observer(fn) -> None:
+    if fn in _OBSERVERS:
+        _OBSERVERS.remove(fn)
+
 
 def install(path: str) -> TraceLog:
     """Open `path` as the process-global span log (appending). Subsequent
@@ -106,18 +126,33 @@ def phase(name: str, cat: str = "engine", **args):
     """Span a host-side phase: profiler annotation + named_scope + JSONL.
 
     `name` is free-form ("serve/ppr_row") or one of the PHASES constants;
-    `args` become the Chrome-trace event's `args` payload. Zero-cost beyond
-    the two jax context managers when no TraceLog is installed."""
+    `args` become the Chrome-trace event's `args` payload. Cheap beyond
+    the two jax context managers when no TraceLog or observer is
+    installed.
+
+    A raised query still flushes its span: the exception is captured in
+    the event's `args.error` field ("TypeName: message") and re-raised, so
+    the JSONL tail holds the failing span instead of silently losing it,
+    and SLO observers see the error for their error-rate counters."""
     log = _LOG
     t0 = time.perf_counter()
+    err: Optional[BaseException] = None
     with jax.profiler.TraceAnnotation(name), jax.named_scope(name):
         try:
             yield
+        except BaseException as e:
+            err = e
+            raise
         finally:
+            dur = (time.perf_counter() - t0) * 1e6
+            payload = dict(args) if args else None
+            if err is not None:
+                payload = dict(payload or {})
+                payload["error"] = f"{type(err).__name__}: {err}"
             if log is not None:
-                dur = (time.perf_counter() - t0) * 1e6
-                ts = (t0 - log._t0) * 1e6
-                log.event(name, cat, ts, dur, args or None)
+                log.event(name, cat, (t0 - log._t0) * 1e6, dur, payload)
+            for fn in list(_OBSERVERS):
+                fn(name, cat, dur, args or {}, err)
 
 
 def read_spans(path: str) -> list:

@@ -25,6 +25,7 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 
 from repro.core.overlay import Overlay
+from repro.obs import trace
 
 
 @dataclass
@@ -53,7 +54,9 @@ class PinnedSnapshot:
         if not self._released:
             self._released = True
             if self._engine is not None:
-                self._engine.unpin_buffers()
+                with trace.phase("serve/unpin", cat="serve",
+                                 epoch=self.epoch):
+                    self._engine.unpin_buffers()
 
     def check_live(self) -> None:
         if self._released:

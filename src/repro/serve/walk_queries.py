@@ -52,7 +52,7 @@ from repro.core import packed_store
 from repro.core.overlay import Overlay
 from repro.core.store import WalkStore
 from repro.core.update import WalkEngine
-from repro.obs import trace
+from repro.obs import slo, trace
 from repro.serve import batched
 from repro.serve.cache import EpochCache
 from repro.serve.snapshots import PinnedSnapshot, pin_snapshot
@@ -73,6 +73,12 @@ def _check_ids(ids, n: int, what: str):
                 f"{what} id out of range: got [{lo}, {hi}] with valid "
                 f"range [0, {n})")
     return a
+
+
+def _view_label(snapshot) -> str:
+    """SLO span label: which view served the query (obs/slo.py keys its
+    latency histograms on kind x view x mode)."""
+    return "live" if snapshot is None else "pinned"
 
 
 class WalkQueryService:
@@ -96,8 +102,25 @@ class WalkQueryService:
         self._emb_cache = EpochCache("emb_norm", max_entries=2)
         self._emb_normed = None
         self._pins_total = 0
+        self._validation_errors = 0
 
     # ------------------------------------------------------------ telemetry
+
+    def _invalid(self, kind: str, err: ValueError) -> ValueError:
+        """Count a host-side input rejection (the `serve_validation_errors`
+        obs counter + the installed SLO collector's per-kind tally) and
+        hand the error back for the caller to raise."""
+        self._validation_errors += 1
+        collector = slo.active()
+        if collector is not None:
+            collector.validation_error(f"serve/{kind}")
+        return err
+
+    def _checked_ids(self, ids, n: int, what: str, kind: str):
+        try:
+            return _check_ids(ids, n, what)
+        except ValueError as e:
+            raise self._invalid(kind, e)
 
     def obs_counters(self) -> dict:
         """Serving-layer counters for `obs.export.summary(m, serve=...)`.
@@ -112,6 +135,7 @@ class WalkQueryService:
         c.update(self._emb_cache.counters())
         c["pins_total"] = self._pins_total
         c["pins_active"] = getattr(self.engine, "pins_active", 0)
+        c["serve_validation_errors"] = self._validation_errors
         return c
 
     # ------------------------------------------------------------ snapshots
@@ -171,7 +195,8 @@ class WalkQueryService:
                       snapshot: Optional[PinnedSnapshot] = None):
         """Batched FINDNEXT: (v_next uint32[B], found bool[B])."""
         ov, _ = self._view(snapshot)
-        with trace.phase("serve/next_vertices", cat="serve"):
+        with trace.phase("serve/next_vertices", cat="serve",
+                         view=_view_label(snapshot), batch=int(np.size(v))):
             v, n = batched.pad_ids(jnp.asarray(v, U32))
             w, _ = batched.pad_ids(jnp.asarray(w, U32))
             p, _ = batched.pad_ids(jnp.asarray(p, U32))
@@ -188,8 +213,11 @@ class WalkQueryService:
         covering FOR bit-packed chunks under the slot-epoch liveness mask,
         so the union equals the post-merge segment exactly)."""
         ov, _ = self._view(snapshot)
-        _check_ids(vertices, ov.base.n_vertices, "walks_of vertex")
-        with trace.phase("serve/walks_of", cat="serve"):
+        self._checked_ids(vertices, ov.base.n_vertices, "walks_of vertex",
+                          "walks_of")
+        with trace.phase("serve/walks_of", cat="serve",
+                         view=_view_label(snapshot),
+                         batch=int(np.size(vertices))):
             ids, n = batched.pad_ids(jnp.asarray(vertices, I32))
             out = batched.walks_of_batch(ov, ids, capacity=capacity)
         return out[:n]
@@ -203,11 +231,15 @@ class WalkQueryService:
         eng = self.engine
         length = eng.store.length
         if not 0 < hops < length:
-            raise ValueError(f"hops must be in [1, {length - 1}] for "
-                             f"length-{length} walks, got {hops}")
-        _check_ids(seeds, eng.store.n_vertices, "neighborhood seed")
+            raise self._invalid("neighborhoods", ValueError(
+                f"hops must be in [1, {length - 1}] for "
+                f"length-{length} walks, got {hops}"))
+        self._checked_ids(seeds, eng.store.n_vertices, "neighborhood seed",
+                          "neighborhoods")
         wm = self.walk_matrix(snapshot=snapshot)
-        with trace.phase("serve/neighborhoods", cat="serve"):
+        with trace.phase("serve/neighborhoods", cat="serve",
+                         view=_view_label(snapshot),
+                         batch=int(np.size(seeds))):
             ids, n = batched.pad_ids(jnp.asarray(seeds, I32))
             nb = batched.neighborhoods_from_matrix(
                 wm, ids, n_w=eng.cfg.n_walks_per_vertex, hops=hops)
@@ -220,7 +252,8 @@ class WalkQueryService:
         ov, epoch = self._view(snapshot)
 
         def build():
-            with trace.phase("serve/walk_matrix", cat="serve", epoch=epoch):
+            with trace.phase("serve/walk_matrix", cat="serve", epoch=epoch,
+                             view=_view_label(snapshot)):
                 return batched.walk_matrix_all(
                     ov, n_w=self.engine.cfg.n_walks_per_vertex,
                     backend=packed_store.resolve_backend(self.backend))
@@ -236,10 +269,10 @@ class WalkQueryService:
         estimator per call and kept one row); warm queries are row
         gathers."""
         if not 0.0 < restart_prob < 1.0:
-            raise ValueError(f"restart_prob must be in (0, 1), "
-                             f"got {restart_prob}")
+            raise self._invalid("ppr_row", ValueError(
+                f"restart_prob must be in (0, 1), got {restart_prob}"))
         n = self.engine.store.n_vertices
-        _check_ids(vertices, n, "ppr vertex")
+        self._checked_ids(vertices, n, "ppr vertex", "ppr_row")
         _, epoch = self._view(snapshot)
 
         def build():
@@ -249,7 +282,9 @@ class WalkQueryService:
                                          restart_prob=restart_prob)
 
         table = self._ppr_cache.get((epoch, restart_prob), build)
-        with trace.phase("serve/ppr_row", cat="serve"):
+        with trace.phase("serve/ppr_row", cat="serve",
+                         view=_view_label(snapshot),
+                         batch=int(np.size(vertices))):
             ids, b = batched.pad_ids(jnp.asarray(vertices, I32))
             rows = batched.gather_rows(table, ids)
         return rows[:b]
@@ -279,15 +314,18 @@ class WalkQueryService:
         embedding table: (ids int32 [B, k], scores f32 [B, k]), the query
         vertex itself excluded. Requires set_embedding_table first."""
         if self._emb_normed is None:
-            raise ValueError("no embedding table installed — call "
-                             "set_embedding_table(maintainer.embeddings)")
+            raise self._invalid("embedding_neighbors", ValueError(
+                "no embedding table installed — call "
+                "set_embedding_table(maintainer.embeddings)"))
         n = self._emb_normed.shape[0]
         if not 0 < k < n:
-            raise ValueError(
+            raise self._invalid("embedding_neighbors", ValueError(
                 f"k must be in [1, {n - 1}] for an {n}-row table with the "
-                f"query vertex excluded, got k={k}")
-        _check_ids(vertices, n, "embedding vertex")
-        with trace.phase("serve/embedding_neighbors", cat="serve"):
+                f"query vertex excluded, got k={k}"))
+        self._checked_ids(vertices, n, "embedding vertex",
+                          "embedding_neighbors")
+        with trace.phase("serve/embedding_neighbors", cat="serve",
+                         batch=int(np.size(vertices))):
             ids, b = batched.pad_ids(jnp.atleast_1d(
                 jnp.asarray(vertices, I32)))
             out_ids, out_scores = batched.embedding_topk(

@@ -363,9 +363,174 @@ def test_sharded_metrics_bit_identity_and_replay():
             assert s["handoff"]["max_dest_load_per_step"] <= cap
             assert all(v is None
                        for v in s["overflow_first_epoch"].values())
+
+            # staleness (DESIGN.md 12): lag counters ride the sharded scan
+            # replicated (slot_epoch is replicated), the auditor is skipped
+            # (store partitioned -> its counters stay 0), and the lag
+            # counters equal a single-host metrics-ON run of the same stream
+            st = m.staleness
+            for leaf in (st.lag_hist, st.lag_sum, st.lag_max,
+                         st.walk_steps, st.stale_walk_steps):
+                arr = np.asarray(leaf)
+                assert (arr == arr[0]).all(), policy
+            for leaf in (st.audit_walks, st.audit_transitions,
+                         st.audit_invalid):
+                assert np.asarray(leaf).sum() == 0, policy
+            eng_on = WalkEngine(graph=jax.tree.map(jnp.array, graph),
+                                store=jax.tree.map(jnp.array, store),
+                                cfg=cfg_on, merge_policy=policy,
+                                rewalk_capacity=cap, max_pending=4)
+            eng_on.run_stream(key, i_s, i_d, d_s, d_d)
+            ss = eng_on.metrics.staleness
+            assert np.array_equal(np.asarray(st.lag_hist)[0],
+                                  np.asarray(ss.lag_hist)), policy
+            for a, b in ((st.lag_max, ss.lag_max),
+                         (st.walk_steps, ss.walk_steps),
+                         (st.stale_walk_steps, ss.stale_walk_steps)):
+                assert int(np.asarray(a)[0]) == int(b), policy
             print("OK", policy, "sent", want_sent)
         print("OK sharded metrics bit-identical + replay")
     """)
+
+
+# ------------------------------------------------- staleness (DESIGN.md §12)
+
+
+def _replay_staleness(aux, slot_epoch0, n_walks, length, n_batches,
+                      epoch0=0):
+    """Pure-numpy replay of the walk-freshness counters from the per-step
+    UpdateAux: slot_epoch evolves by stamping each valid lane's rewritten
+    suffix [p_min, l), then per-walk lag = epoch - max(slot_epoch) (the min
+    slot-lag — rewalks always rewrite through the terminal slot)."""
+    from repro.obs.staleness import LAG_BUCKETS, LAG_THRESHOLDS, STALE_LAG
+
+    se = np.asarray(slot_epoch0, np.int64).reshape(n_walks, length).copy()
+    wids = np.asarray(aux.walk_ids)
+    p_min = np.asarray(aux.p_min)
+    valid = np.asarray(aux.lane_valid)
+    hist = np.zeros(LAG_BUCKETS, np.int64)
+    lag_sum = 0.0
+    lag_max = walk_steps = stale = 0
+    for step in range(n_batches):
+        epoch = epoch0 + step + 1
+        for w, pm, ok in zip(wids[step], p_min[step], valid[step]):
+            if ok:
+                se[int(w), int(pm):] = epoch
+        lag = epoch - se.max(axis=1)
+        bucket = (lag[:, None] >= np.asarray(LAG_THRESHOLDS)[None]).sum(1)
+        np.add.at(hist, bucket, 1)
+        lag_sum += float(lag.sum())
+        lag_max = max(lag_max, int(lag.max()))
+        walk_steps += n_walks
+        stale += int((lag >= STALE_LAG).sum())
+    return {"slot_epoch": se, "hist": hist, "lag_sum": lag_sum,
+            "lag_max": lag_max, "walk_steps": walk_steps, "stale": stale}
+
+
+@pytest.mark.parametrize("policy", ["on-demand", "eager"])
+def test_staleness_counters_match_numpy_replay(policy):
+    """The scan-carried freshness counters equal the numpy replay of the
+    same stream (lag histogram, sum/max, stale-walk steps), the replayed
+    slot_epoch equals the engine's, and the auditor reads 0 invalid
+    transitions on a maintained engine."""
+    cfg = WalkConfig(n_walks_per_vertex=2, length=8, metrics=True)
+    g, store = make_graph_store(cfg)
+    i_s, i_d, d_s, d_d = make_stream()
+    eng = make_engine(g, store, cfg, policy)
+    aff, aux = eng.run_stream(jax.random.PRNGKey(3), i_s, i_d, d_s, d_d,
+                              return_masks=True)
+    assert not eng.mav_overflowed
+
+    want = _replay_staleness(aux, store.slot_epoch, store.n_walks,
+                             cfg.length, N_BATCHES)
+    np.testing.assert_array_equal(
+        np.asarray(eng.store.slot_epoch).reshape(store.n_walks, cfg.length),
+        want["slot_epoch"], err_msg="slot_epoch replay diverged")
+    st = eng.metrics.staleness
+    np.testing.assert_array_equal(np.asarray(st.lag_hist), want["hist"])
+    assert float(st.lag_sum) == want["lag_sum"]
+    assert int(st.lag_max) == want["lag_max"]
+    assert int(st.walk_steps) == want["walk_steps"]
+    assert int(st.stale_walk_steps) == want["stale"]
+
+    s = summary(eng.metrics)["staleness"]
+    assert s["walk_lag_hist"]["counts"] == list(want["hist"])
+    assert s["stale_fraction"] == round(want["stale"]
+                                        / want["walk_steps"], 6)
+    # divergence auditor: k walks x (l-1) transitions per step, 0 invalid
+    # on a maintained engine (the engine's own rewalks track every update)
+    assert s["audit"]["walks"] == cfg.audit_k * N_BATCHES
+    assert s["audit"]["transitions"] == cfg.audit_k * (cfg.length - 1) \
+        * N_BATCHES
+    assert s["audit"]["invalid"] == 0
+
+
+def test_divergence_auditor_detects_foreign_edits():
+    """Deleting graph edges BEHIND the engine's back (state surgery, no
+    maintenance step) makes the auditor count invalid transitions — and the
+    count matches an independent numpy replay over the reconstructed walks
+    and the same fold_in-derived sample."""
+    from repro.core.corpus import walk_start_vertex
+    from repro.obs.staleness import AUDIT_SALT
+
+    cfg = WalkConfig(n_walks_per_vertex=2, length=8, metrics=True,
+                     audit_k=16)
+    src, dst = rmat_edges(jax.random.PRNGKey(0), 200, LOG2_N)
+    g = StreamingGraph.from_edges(src, dst, N, 4096)
+    store = generate_corpus(jax.random.PRNGKey(1), g, cfg)
+    eng = make_engine(g, store, cfg, "on-demand")
+    i_s, i_d, d_s, d_d = make_stream(n_batches=1)
+    key1, key2 = jax.random.PRNGKey(3), jax.random.PRNGKey(4)
+    eng.run_stream(key1, i_s, i_d, d_s, d_d)
+    assert int(eng.metrics.staleness.audit_invalid) == 0
+
+    # foreign edit: a graph rebuilt WITHOUT most original edges, swapped in
+    # under the engine — walks still reference the removed edges
+    g_cut = StreamingGraph.from_edges(src[:40], dst[:40], N, 4096)
+    eng.state = eng.state.replace(graph=jax.tree.map(jnp.array, g_cut))
+    i2, j2, k2, l2 = make_stream(n_batches=1, seed=11)
+    eng.run_stream(key2, i2, j2, k2, l2)
+    invalid = int(eng.metrics.staleness.audit_invalid)
+    assert invalid > 0, "auditor blind to foreign graph edits"
+
+    # numpy replay of the second step's audit: same sampled walk ids (the
+    # audit key folds off the per-step update key), walks reconstructed
+    # from the merged corpus, transitions checked against the live graph
+    step_key = jax.random.split(key2, 1)[0]
+    akey = jax.random.fold_in(step_key, AUDIT_SALT)
+    wids = np.asarray(jax.random.randint(akey, (cfg.audit_k,), 0,
+                                         store.n_walks))
+    walks = np.asarray(eng.walk_matrix())
+    deg = np.asarray(eng.graph.degrees())
+    starts = np.asarray(walk_start_vertex(jnp.asarray(wids, jnp.uint32),
+                                          cfg.n_walks_per_vertex))
+    np.testing.assert_array_equal(walks[wids, 0], starts)
+    u = jnp.asarray(walks[wids, :-1].reshape(-1), jnp.uint32)
+    x = jnp.asarray(walks[wids, 1:].reshape(-1), jnp.uint32)
+    has = np.asarray(eng.graph.has_edge(u, x)).reshape(len(wids), -1)
+    loop_ok = ((walks[wids, :-1] == walks[wids, 1:])
+               & (deg[walks[wids, :-1]] == 0))
+    assert invalid == int((~(has | loop_ok)).sum())
+
+
+def test_audit_k_zero_compiles_auditor_out():
+    """audit_k=0 keeps the lag counters but no audit sampling: the audit
+    counters stay 0 even against a corrupted graph."""
+    cfg = WalkConfig(n_walks_per_vertex=2, length=8, metrics=True,
+                     audit_k=0)
+    src, dst = rmat_edges(jax.random.PRNGKey(0), 200, LOG2_N)
+    g = StreamingGraph.from_edges(src, dst, N, 4096)
+    store = generate_corpus(jax.random.PRNGKey(1), g, cfg)
+    eng = make_engine(g, store, cfg, "on-demand")
+    g_cut = StreamingGraph.from_edges(src[:40], dst[:40], N, 4096)
+    eng.state = eng.state.replace(graph=jax.tree.map(jnp.array, g_cut))
+    i_s, i_d, d_s, d_d = make_stream(n_batches=1)
+    eng.run_stream(jax.random.PRNGKey(3), i_s, i_d, d_s, d_d)
+    st = eng.metrics.staleness
+    assert int(st.audit_walks) == 0
+    assert int(st.audit_transitions) == 0
+    assert int(st.audit_invalid) == 0
+    assert int(st.walk_steps) == store.n_walks
 
 
 # --------------------------------------------------------------- maintainer
@@ -428,7 +593,7 @@ def _fake_metrics():
 def test_export_summary_schema_and_prometheus(tmp_path):
     s = summary(_fake_metrics(), serve={"ppr_cache_hit": 7,
                                         "ppr_cache_miss": 2})
-    assert s["schema"] == 1
+    assert s["schema"] == 2
     assert s["affected"] == {"total": 100, "max_per_step": 40,
                              "mean_per_step": 25.0}
     assert sum(s["rewalk_suffix_hist"]["counts"]) == 100
@@ -507,6 +672,283 @@ def test_serve_counters():
     c = svc.obs_counters()
     assert c["ppr_cache_miss"] == 1 and c["ppr_cache_hit"] == 1
     assert c["overlay_rebuilds"] >= 1
+
+
+def test_summary_v1_upgrades_to_v2():
+    """Schema v2 is append-only: a v1 payload upgrades by zero-filling the
+    staleness section; v2 round-trips unchanged; unknown schemas raise."""
+    from repro.obs.export import upgrade_summary
+
+    s2 = summary(_fake_metrics())
+    v1 = {k: v for k, v in s2.items() if k != "staleness"}
+    v1["schema"] = 1
+    up = upgrade_summary(dict(v1))
+    assert up["schema"] == 2
+    assert up["staleness"]["walk_steps"] == 0
+    assert up["staleness"]["stale_fraction"] == 0.0
+    assert up["staleness"]["audit"]["divergence_rate"] == 0.0
+    # every v1 key survives untouched
+    for k, v in v1.items():
+        if k != "schema":
+            assert up[k] == v
+    assert upgrade_summary(dict(s2)) == s2          # idempotent on v2
+    with pytest.raises(ValueError):
+        upgrade_summary({"schema": 99})
+
+
+def test_prometheus_escaping_and_headers():
+    """Exposition-format hygiene: label values escape backslash, quote and
+    newline; metric names sanitize; every emitted sample family carries
+    exactly one # HELP and one # TYPE line."""
+    from repro.obs.export import escape_label_value, metric_name
+
+    assert escape_label_value('a"b\\c\nd') == 'a\\"b\\\\c\\nd'
+    assert escape_label_value("plain") == "plain"
+    assert metric_name("serve/walk matrix-reads") == \
+        "serve_walk_matrix_reads"
+
+    weird = 'serve/we"ird\\kind\nq'
+    hist = {"count": 3, "mean_us": 10.0, "p50_us": 8.0, "p95_us": 16.0,
+            "p99_us": 16.0}
+    sl = {"window_s": 2.0,
+          "kinds": {weird: dict(hist, errors=1, validation_errors=0,
+                                qps=1.5, by={"live/percall": hist})},
+          "targets": {weird: {"latency_us": 1000.0, "objective": 0.99}},
+          "burn_rates": {weird: 0.25}}
+    text = to_prometheus(_fake_metrics(),
+                         serve={'odd key': 2, "ppr_cache_hit": 7}, slo=sl)
+    assert 'kind="serve/we\\"ird\\\\kind\\nq"' in text
+    assert "wharf_serve_odd_key_total 2" in text
+    assert "wharf_walk_freshness_lag_bucket" in text
+    assert 'wharf_serve_latency_us{kind="serve/we\\"ird\\\\kind\\nq",' \
+        'quantile="p99"} 16.0' in text
+
+    # HELP/TYPE exactly once per family, for every family with samples
+    import collections
+    help_c = collections.Counter()
+    type_c = collections.Counter()
+    sampled = set()
+    for line in text.splitlines():
+        if line.startswith("# HELP "):
+            help_c[line.split()[2]] += 1
+        elif line.startswith("# TYPE "):
+            type_c[line.split()[2]] += 1
+        elif line and not line.startswith("#"):
+            name = re.split(r"[{ ]", line, 1)[0]
+            sampled.add(name)
+    for name in sampled:
+        fam = re.sub(r"_(bucket|count|sum)$", "", name)
+        ok = ({help_c.get(name, 0), type_c.get(name, 0)} == {1}
+              or {help_c.get(fam, 0), type_c.get(fam, 0)} == {1})
+        assert ok, f"missing/duplicated HELP/TYPE for {name}"
+
+
+def test_trace_phase_flushes_on_exception():
+    """Satellite fix: a phase body that raises still writes its span (with
+    an `error` field in args) and still notifies observers; the exception
+    propagates."""
+    import tempfile
+
+    seen = []
+
+    def watch(name, cat, dur, args, err):
+        seen.append((name, err))
+
+    obs_trace.add_observer(watch)
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "spans.jsonl")
+        obs_trace.install(path)
+        try:
+            with pytest.raises(RuntimeError, match="boom"):
+                with obs_trace.phase("serve/explodes", cat="serve", v=1):
+                    raise RuntimeError("boom")
+            spans = obs_trace.read_spans(path)
+        finally:
+            obs_trace.uninstall()
+            obs_trace.remove_observer(watch)
+    assert [e["name"] for e in spans] == ["serve/explodes"]
+    assert spans[0]["args"]["v"] == 1
+    assert spans[0]["args"]["error"] == "RuntimeError: boom"
+    assert len(seen) == 1
+    assert seen[0][0] == "serve/explodes"
+    assert isinstance(seen[0][1], RuntimeError)
+
+
+def test_serve_slo_collector():
+    """ServeSLO: log2-bucket quantiles, exact burn rates, span-observer
+    wiring through real phase() spans, live/pinned x batched/percall keys."""
+    from repro.obs import slo
+
+    h = slo.LatencyHistogram()
+    for d in (0.5, 3.0, 3.0, 100.0):
+        h.observe(d)
+    assert h.count == 4 and h.counts[0] == 1
+    assert h.quantile_us(0.50) == 4.0       # covering-bucket upper bound
+    assert h.quantile_us(0.99) == 128.0
+    assert slo.LatencyHistogram().quantile_us(0.5) == 0.0
+
+    c = slo.ServeSLO(targets={"serve/x": slo.SLOTarget(latency_us=15.0,
+                                                       objective=0.9)})
+    c.observe("serve/x", 10.0)
+    c.observe("serve/x", 20.0, view="pinned", mode="batched")
+    assert c.burn_rates() == {"serve/x": 5.0}   # (1/2) / (1 - 0.9)
+    s = c.summary()
+    k = s["kinds"]["serve/x"]
+    assert k["count"] == 2
+    assert set(k["by"]) == {"live/percall", "pinned/batched"}
+    assert k["p50_us"] == 16.0 and k["qps"] > 0
+    assert s["targets"]["serve/x"] == {"latency_us": 15.0,
+                                       "objective": 0.9}
+
+    col = slo.install(slo.ServeSLO())
+    try:
+        assert slo.active() is col
+        with obs_trace.phase("serve/q", cat="serve", view="pinned",
+                             batch=8):
+            pass
+        with obs_trace.phase("serve/q", cat="serve"):
+            pass
+        with obs_trace.phase("engine/ignored"):
+            pass
+    finally:
+        slo.uninstall()
+    assert slo.active() is None
+    ks = col.summary()["kinds"]
+    assert set(ks) == {"serve/q"}
+    assert set(ks["serve/q"]["by"]) == {"pinned/batched", "live/percall"}
+    # uninstalled -> spans no longer land
+    with obs_trace.phase("serve/q", cat="serve"):
+        pass
+    assert col.summary()["kinds"]["serve/q"]["count"] == 2
+
+
+def test_serve_validation_error_counter():
+    """Host-side ValueError rejections count in `serve_validation_errors`
+    (and per kind in an installed SLO collector); the error still raises."""
+    from repro.obs import slo
+    from repro.serve.walk_queries import WalkQueryService
+
+    cfg = WalkConfig(n_walks_per_vertex=2, length=8)
+    g, store = make_graph_store(cfg)
+    svc = WalkQueryService(engine=make_engine(g, store, cfg, "on-demand"))
+    col = slo.install(slo.ServeSLO())
+    try:
+        with pytest.raises(ValueError):
+            svc.ppr_rows([N + 5])                   # out-of-range vertex
+        with pytest.raises(ValueError):
+            svc.neighborhoods([0], hops=0)          # bad hops
+        with pytest.raises(ValueError):
+            svc.ppr_rows([0], restart_prob=1.5)     # bad restart prob
+    finally:
+        slo.uninstall()
+    assert svc.obs_counters()["serve_validation_errors"] == 3
+    v = col.summary()["kinds"]
+    # validation kinds use the SPAN names (serve/ppr_row covers both the
+    # batched and singleton forms) so latency and rejections aggregate
+    assert v["serve/ppr_row"]["validation_errors"] == 2
+    assert v["serve/neighborhoods"]["validation_errors"] == 1
+    # valid queries keep working and don't bump the counter
+    svc.ppr_rows([0])
+    assert svc.obs_counters()["serve_validation_errors"] == 3
+
+
+# ------------------------------------------------- regression sentinel (§12)
+
+
+def test_regress_compare_semantics(tmp_path):
+    """Cell statuses (pass/fail/info/new/missing), direction awareness,
+    wall-clock-never-gates, config-exact, and override-rule priority."""
+    from repro.obs import regress
+
+    base = {"config": {"n": 64}, "t_us": 100.0, "qps": 50.0,
+            "counters": {"c": 100}, "acc": 0.80, "gone": 1}
+    cur = {"config": {"n": 64}, "t_us": 500.0, "qps": 10.0,
+           "counters": {"c": 150}, "acc": 0.78, "fresh": 2}
+    v = regress.compare(base, cur)
+    by = {c["path"]: c for c in v["cells"]}
+    assert v["verdict"] == "fail"
+    assert by["counters.c"]["status"] == "fail"      # +50% > 5% gated band
+    assert by["t_us"]["status"] == "info"            # wall-clock never gates
+    assert by["qps"]["status"] == "info"
+    assert by["gone"]["status"] == "missing"
+    assert by["fresh"]["status"] == "new"
+    assert "acc" not in by                           # -0.02 within abs band
+
+    # direction awareness: a large accuracy GAIN passes, the same-size drop
+    # fails (higher_better); quality_gap is the mirror image
+    assert regress.compare({"acc": 0.5}, {"acc": 0.9})["verdict"] == "pass"
+    assert regress.compare({"acc": 0.9}, {"acc": 0.5})["verdict"] == "fail"
+    assert regress.compare({"quality_gap": 0.30},
+                           {"quality_gap": 0.02})["verdict"] == "pass"
+    assert regress.compare({"quality_gap": 0.02},
+                           {"quality_gap": 0.30})["verdict"] == "fail"
+
+    # config cells are exact (any move fails -> forces baseline regen)
+    assert regress.compare({"config": {"n": 64}},
+                           {"config": {"n": 128}})["verdict"] == "fail"
+    # non-numeric cells compare by equality
+    assert regress.compare({"pin": {"ok": True}},
+                           {"pin": {"ok": False}})["verdict"] == "fail"
+
+    # override rules prepend to (and win over) the defaults
+    p = tmp_path / "thresholds.json"
+    p.write_text('{"rules": [{"pattern": "counters.c", '
+                 '"max_rel_delta": 0.1, "gate": false}]}')
+    rules = regress.load_rules(str(p))
+    v2 = regress.compare(base, cur, rules)
+    assert v2["verdict"] == "pass"
+    assert {c["path"]: c["status"] for c in v2["cells"]}["counters.c"] \
+        == "info"
+
+    # multi-file verdict aggregation
+    vd = regress.Verdict(mode="smoke")
+    vd.add("A", {"verdict": "pass", "counts": {}})
+    assert vd.verdict == "pass"
+    vd.add("B", v)
+    out = vd.to_json()
+    assert out["verdict"] == "fail" and out["schema"] == 1
+    assert set(out["files"]) == {"A", "B"}
+
+
+def test_check_regression_cli(tmp_path):
+    """End-to-end sentinel: --update-baselines copies, a clean re-check
+    passes, a gated regression returns exit code 1 with the cell named in
+    the verdict JSON."""
+    import json
+
+    from benchmarks import check_regression as cr
+
+    fresh = tmp_path / "fresh"
+    basedir = tmp_path / "baselines"
+    fresh.mkdir()
+    payload = {"config": {"n": 8}, "counters": {"c": 100}, "t_us": 5.0}
+    (fresh / "BENCH_MEMORY.smoke.json").write_text(json.dumps(payload))
+
+    rc = cr.run_check(True, baseline_dir=str(basedir),
+                      thresholds=str(tmp_path / "missing.json"),
+                      fresh_dir=str(fresh), update_baselines=True)
+    assert rc == 0
+    assert (basedir / "BENCH_MEMORY.smoke.json").exists()
+
+    rc = cr.run_check(True, baseline_dir=str(basedir),
+                      thresholds=str(tmp_path / "missing.json"),
+                      fresh_dir=str(fresh))
+    assert rc == 0                                  # identical -> pass
+
+    payload["counters"]["c"] = 200                  # gated counter moved
+    payload["t_us"] = 50.0                          # info-only move
+    (fresh / "BENCH_MEMORY.smoke.json").write_text(json.dumps(payload))
+    rc = cr.run_check(True, baseline_dir=str(basedir),
+                      thresholds=str(tmp_path / "missing.json"),
+                      fresh_dir=str(fresh))
+    assert rc == 1
+    verdict = json.loads(
+        (fresh / "bench_regression.smoke.json").read_text())
+    assert verdict["verdict"] == "fail"
+    cells = {c["path"]: c["status"]
+             for c in verdict["files"]["BENCH_MEMORY"]["cells"]}
+    assert cells["counters.c"] == "fail"
+    assert cells["t_us"] == "info"
 
 
 # ----------------------------------------------------------- import purity
